@@ -1,0 +1,68 @@
+"""Shared benchmark helpers: Monte-Carlo error sweeps + CSV/JSON reporting."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.metrics import relative_error
+from repro.data.matrices import random_rhs, toeplitz, wishart
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+SIZES_PAPER = (8, 16, 32, 64, 128, 256, 512)
+N_SIMS_PAPER = 40                       # "40 random simulations" (Section IV)
+
+
+def save_json(name: str, payload: Dict) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def matrix_of(family: str, key, n: int):
+    return wishart(key, n) if family == "wishart" else toeplitz(key, n)
+
+
+def mc_errors(family: str, n: int, cfg: AnalogConfig, solver: str,
+              n_sims: int = N_SIMS_PAPER, stages=None, seed: int = 0
+              ) -> np.ndarray:
+    """Relative errors over `n_sims` independent device-noise draws."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = matrix_of(family, ka, n)
+    b = random_rhs(kb, n)
+    x_ref = jnp.linalg.solve(a, b)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_sims)
+
+    if solver == "original":
+        fn = lambda k: blockamc.solve_original(a, b, k, cfg)
+    else:
+        fn = lambda k: blockamc.solve(a, b, k, cfg, stages=stages)
+    xs = jax.lax.map(fn, keys)          # sequential map: modest memory
+    errs = jax.vmap(lambda x: relative_error(x_ref, x))(xs)
+    return np.asarray(errs)
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (CPU; documentation only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

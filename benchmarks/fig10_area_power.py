@@ -1,0 +1,39 @@
+"""Paper Fig. 10: area & power breakdown of the three 512x512 solvers.
+
+Reproduces the headline numbers (one-stage: 48.83% area / 40% power saving;
+two-stage: 12.3% / 37.4%) from the component-count model calibrated per
+core/area_energy.py, plus the macro timing model (latency / initiation
+interval) from core/macro.py.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, save_json
+from repro.core import area_energy, macro
+
+
+def main():
+    rep = area_energy.report()
+    sav = area_energy.savings(rep)
+    perf = {s: macro.solver_performance(s, n_solves=16)
+            for s in ("original", "one_stage", "two_stage")}
+    save_json("fig10_area_power", {"report": rep, "savings": sav,
+                                   "macro_perf": perf})
+    csv_row("fig10_area_totals_mm2", 0.0,
+            f"orig={rep['area']['original']['total']:.5f};"
+            f"one={rep['area']['one_stage']['total']:.5f};"
+            f"two={rep['area']['two_stage']['total']:.5f}")
+    csv_row("fig10_savings", 0.0,
+            f"area_one={sav['area']['one_stage']:.4f};"
+            f"area_two={sav['area']['two_stage']:.4f};"
+            f"power_one={sav['power']['one_stage']:.4f};"
+            f"power_two={sav['power']['two_stage']:.4f}")
+    csv_row("fig10_macro_cycles", 0.0,
+            f"one_latency={perf['one_stage']['latency_cycles']};"
+            f"one_II={perf['one_stage']['initiation_interval']};"
+            f"two_latency={perf['two_stage']['latency_cycles']};"
+            f"two_II={perf['two_stage']['initiation_interval']}")
+    return {"savings": sav}
+
+
+if __name__ == "__main__":
+    main()

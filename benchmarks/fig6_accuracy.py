@@ -1,0 +1,106 @@
+"""Paper Fig. 6: ideal-mapping accuracy (finite-OPA-gain HSPICE stand-in).
+
+(a) step-by-step cascade signals vs the numerical solver (256x256 Wishart),
+(b) final solutions, (c) relative error vs matrix size, original AMC vs
+one-stage BlockAMC.  Device mapping is ideal (no conductance noise, no wire
+resistance); the error floor comes from finite OPA open-loop gain, which is
+what makes smaller BlockAMC arrays intrinsically more accurate (DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SIZES_PAPER, csv_row, matrix_of, save_json, timed
+from repro.core import analog, blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.metrics import relative_error
+from repro.data.matrices import random_rhs
+
+OPA_GAIN = 1e4
+
+
+def step_by_step(n: int = 256):
+    """Fig. 6(a): the five cascade signals vs numpy, one-stage solver."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = matrix_of("wishart", ka, n)
+    b = random_rhs(kb, n)
+    cfg = AnalogConfig(array_size=n // 2, opa_gain=OPA_GAIN)
+    m = n // 2
+    a1, a2 = a[:m, :m], a[:m, m:]
+    a3, a4 = a[m:, :m], a[m:, m:]
+    f, g = b[:m], b[m:]
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    p1 = analog.map_matrix(a1, keys[0], cfg, scale)
+    p2 = analog.map_tiled(a2, keys[1], cfg, scale)
+    p3 = analog.map_tiled(a3, keys[2], cfg, scale)
+    a4s = a4 - a3 @ jnp.linalg.solve(a1, a2)
+    p4 = analog.map_matrix(a4s, keys[3], cfg, scale)
+
+    # numerical references (scaled domain)
+    y_t = jnp.linalg.solve(a1, f)
+    g_t = a3 @ y_t
+    z_ref = jnp.linalg.solve(a4s, g - g_t)
+    f_t = a2 @ z_ref
+    y_ref = jnp.linalg.solve(a1, f - f_t)
+
+    neg_yt = analog.amc_inv(p1, f, cfg)                     # step 1
+    gt = analog.amc_mvm_tiled(p3, neg_yt, cfg)              # step 2
+    z = analog.amc_inv(p4, -g + gt, cfg)                    # step 3 (=+z/c)
+    neg_ft = analog.amc_mvm_tiled(p2, z, cfg)               # step 4
+    neg_y = analog.amc_inv(p1, f + neg_ft, cfg)             # step 5
+
+    # Scale bookkeeping: arrays hold c*A (c = scale), so INV outputs are
+    # (true)/c and MVM outputs of INV results are unscaled (c cancels).
+    steps = {
+        "step1_yt": float(relative_error(y_t, -neg_yt * scale)),
+        "step2_gt": float(relative_error(g_t, gt)),
+        "step3_z": float(relative_error(z_ref, z * scale)),
+        "step4_ft": float(relative_error(f_t, -neg_ft)),
+        "step5_y": float(relative_error(y_ref, -neg_y * scale)),
+    }
+    return steps
+
+
+def error_vs_size():
+    """Fig. 6(c)."""
+    rows = []
+    for n in SIZES_PAPER:
+        ka, kb, kn = jax.random.split(jax.random.PRNGKey(2), 3)
+        a = matrix_of("wishart", ka, n)
+        b = random_rhs(kb, n)
+        x_ref = jnp.linalg.solve(a, b)
+        cfg = AnalogConfig(array_size=max(n // 2, 4), opa_gain=OPA_GAIN)
+        xb = blockamc.solve(a, b, kn, cfg, stages=1)
+        xo = blockamc.solve_original(a, b, kn, cfg)
+        rows.append({"n": n,
+                     "blockamc": float(relative_error(x_ref, xb)),
+                     "original": float(relative_error(x_ref, xo))})
+    return rows
+
+
+def main():
+    steps = step_by_step()
+    rows = error_vs_size()
+    save_json("fig6_accuracy", {"steps_256": steps, "error_vs_size": rows})
+    # timing of a full one-stage 256 solve (CPU wall time, context only)
+    ka, kb, kn = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = matrix_of("wishart", ka, 256)
+    b = random_rhs(kb, 256)
+    cfg = AnalogConfig(array_size=128, opa_gain=OPA_GAIN)
+    fn = jax.jit(lambda: blockamc.solve(a, b, kn, cfg, stages=1))
+    us = timed(fn)
+    final = rows[-2]  # n = 256
+    csv_row("fig6_step_cascade_maxerr", us,
+            f"max_step_relerr={max(steps.values()):.2e}")
+    csv_row("fig6_block_vs_orig_n256", us,
+            f"block={final['blockamc']:.4f};orig={final['original']:.4f}")
+    better = sum(1 for r in rows if r["blockamc"] <= r["original"])
+    csv_row("fig6_block_better_fraction", us, f"{better}/{len(rows)}")
+    return {"steps": steps, "rows": rows}
+
+
+if __name__ == "__main__":
+    main()

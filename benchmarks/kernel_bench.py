@@ -1,0 +1,49 @@
+"""Pallas kernel microbenchmarks.
+
+On this CPU container kernels execute in interpret mode (Python per grid
+step), so wall times here measure the *oracle* jnp path as the meaningful
+number and the interpret path only for correctness parity; the TPU numbers
+come from the roofline analysis (EXPERIMENTS.md).  derived = model GB
+touched per call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, save_json, timed
+from repro.kernels import ops, ref
+
+G0 = 100e-6
+
+
+def main():
+    out = {}
+    for b, r, c in ((256, 512, 512), (512, 1024, 1024)):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        v = jax.random.uniform(k1, (b, c), minval=-1, maxval=1)
+        gp = jax.random.uniform(k2, (r, c), maxval=G0)
+        gn = jax.random.uniform(k3, (r, c), maxval=G0)
+        fn = jax.jit(lambda v, gp, gn: ref.crossbar_mvm_ref(
+            v, gp, gn, g0=G0, dac_bits=8, adc_bits=8))
+        us = timed(fn, v, gp, gn)
+        gb = (v.size + gp.size + gn.size + b * r) * 4 / 1e9
+        csv_row(f"crossbar_mvm_ref_{b}x{r}x{c}", us, f"GB={gb:.3f}")
+        out[f"crossbar_{b}x{r}x{c}"] = us
+
+    for n in (512, 1024):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        a4 = jax.random.normal(k1, (n, n))
+        a3 = jax.random.normal(k2, (n, n))
+        w = jax.random.normal(k3, (n, n))
+        fn = jax.jit(lambda a4, a3, w: ref.schur_update_ref(a4, a3, w))
+        us = timed(fn, a4, a3, w)
+        csv_row(f"schur_update_ref_{n}", us,
+                f"GFLOP={2 * n ** 3 / 1e9:.2f}")
+        out[f"schur_{n}"] = us
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Generate the full roofline table (ROOFLINE.md) from dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def rows_for(directory: str, mesh: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(directory, f"*__{mesh}.json"))):
+        r = json.load(open(p))
+        if "skipped" in r:
+            rows.append((r["arch"], r["shape"], "SKIP (sub-quadratic rule)",
+                         "", "", "", "", ""))
+            continue
+        if "error" in r:
+            rows.append((r["arch"], r["shape"], "ERROR", "", "", "", "", ""))
+            continue
+        t = r["roofline"]
+        dom = r["dominant"].replace("_s", "")
+        frac = (t["compute_s"] / max(t[r["dominant"]], 1e-12))
+        rows.append((
+            r["arch"], r["shape"], dom,
+            f"{t['compute_s']:.4g}", f"{t['memory_s']:.4g}",
+            f"{t['collective_s']:.4g}",
+            f"{r.get('useful_flop_ratio') or 0:.2f}",
+            f"{frac:.3f}"))
+    return rows
+
+
+def table(rows):
+    head = ("| arch | shape | dominant | compute s | memory s | "
+            "collective s | useful | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|\n")
+    return head + "\n".join(
+        "| " + " | ".join(str(c) for c in r) + " |" for r in rows)
+
+
+def main():
+    out = ["# Roofline tables (generated)\n"]
+    out.append("\n## Single-pod 16x16 — optimized (current framework)\n")
+    out.append(table(rows_for(os.path.join(ROOT, "dryrun"), "16x16")))
+    out.append("\n\n## Multi-pod 2x16x16 — optimized\n")
+    out.append(table(rows_for(os.path.join(ROOT, "dryrun"), "2x16x16")))
+    base = os.path.join(ROOT, "dryrun_baseline_pre_hillclimb")
+    if os.path.isdir(base):
+        out.append("\n\n## Single-pod 16x16 — paper-faithful baseline "
+                   "(pre-hillclimb)\n")
+        out.append(table(rows_for(base, "16x16")))
+    text = "".join(out) + "\n"
+    path = os.path.join(os.path.dirname(__file__), "..", "ROOFLINE.md")
+    with open(path, "w") as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is CPU wall time
+where meaningful, 0.0 for pure-accuracy rows) and writes JSON artifacts to
+artifacts/bench/ consumed by EXPERIMENTS.md.
+
+  fig6  - ideal-mapping accuracy (finite OPA gain), step cascade
+  fig7  - device variation, Wishart/Toeplitz, 40 sims
+  fig8  - two-stage solver
+  fig9  - variation + interconnect resistance
+  fig10 - area/power breakdown + macro timing model
+  hybrid, distributed, kernels - beyond-figure system benchmarks
+
+Fast mode (default): fewer Monte-Carlo sims and capped sizes so the suite
+finishes in minutes on one CPU core; --paper runs the full 40-sim, 512-size
+protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (common, distributed_solver, fig6_accuracy,
+                        fig7_variation, fig8_twostage, fig9_interconnect,
+                        fig10_area_power, hybrid_refinement, kernel_bench)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full 40-sim protocol up to 512x512")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig6,fig10")
+    args = ap.parse_args()
+
+    if not args.paper:
+        common.N_SIMS_PAPER = 8
+        common.SIZES_PAPER = (8, 16, 32, 64, 128, 256)
+        fig7_variation.N_SIMS_PAPER = 8
+        fig7_variation.SIZES_PAPER = common.SIZES_PAPER
+        fig8_twostage.N_SIMS_PAPER = 8
+        fig8_twostage.SIZES = (64, 128, 256)
+        fig9_interconnect.N_SIMS_PAPER = 8
+        fig9_interconnect.SIZES = (16, 32, 64, 128)
+        fig6_accuracy.SIZES_PAPER = common.SIZES_PAPER
+
+    suites = {
+        "fig6": fig6_accuracy.main,
+        "fig7": fig7_variation.main,
+        "fig8": fig8_twostage.main,
+        "fig9": fig9_interconnect.main,
+        "fig10": fig10_area_power.main,
+        "hybrid": hybrid_refinement.main,
+        "distributed": distributed_solver.main,
+        "kernels": kernel_bench.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        suites[name]()
+
+
+if __name__ == "__main__":
+    main()

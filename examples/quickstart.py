@@ -1,0 +1,51 @@
+"""Quickstart: solve a linear system with BlockAMC in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 256x256 Wishart system, solves it with the paper's one-stage and
+two-stage BlockAMC under realistic non-idealities (5% conductance noise,
+1 ohm wire segments), and refines the analog seed digitally - the full
+hybrid flow the paper positions AMC for.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockamc, hybrid
+from repro.core.analog import AnalogConfig
+from repro.core.metrics import relative_error
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+
+
+def main():
+    key_a, key_b, key_noise = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = wishart(key_a, 256)
+    b = random_rhs(key_b, 256)
+    x_true = jnp.linalg.solve(a, b)
+
+    for sigma in (0.01, 0.05):
+        cfg = AnalogConfig(
+            array_size=128,                      # max physical RRAM array
+            nonideal=NonidealConfig(sigma=sigma,  # conductance noise (of G0)
+                                    r_wire=1.0),  # 1 ohm wire segments
+        )
+        for stages, label in ((1, "one-stage"), (2, "two-stage")):
+            x_analog = blockamc.solve(a, b, key_noise, cfg, stages=stages)
+            err = float(relative_error(x_true, x_analog))
+            x_refined, iters = hybrid.iterations_to_tol(
+                a, b, x_analog, tol=1e-6, method="richardson",
+                max_iters=20000)
+            final = float(relative_error(x_true, x_refined))
+            print(f"sigma={sigma:.2f} {label:10s}: analog seed err {err:.3f}"
+                  f" -> refined {final:.2e} in {int(iters)} Richardson iters")
+
+    _, iters_zero = hybrid.iterations_to_tol(
+        a, b, jnp.zeros_like(b), tol=1e-6, method="richardson",
+        max_iters=20000)
+    print(f"zero seed : {int(iters_zero)} Richardson iterations")
+    print("(the analog head start scales with seed accuracy; at high noise "
+          "the seed adds little - see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

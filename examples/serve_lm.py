@@ -1,0 +1,44 @@
+"""Serve a small model with batched requests through the generation engine.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
+
+Demonstrates prefill -> batched greedy decode with the family-correct cache
+(KV ring buffers for local attention, recurrent states for RG-LRU/SSD).
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import host_scale_config
+from repro.models import transformer as tr
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = host_scale_config(get_config(args.arch))
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params,
+                    max_len=args.prompt_len + args.gen_len + 1)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.gen_len)
+    dt = time.perf_counter() - t0
+    print(f"arch family     : {args.arch} (host-scale)")
+    print(f"batch x gen     : {args.batch} x {args.gen_len}")
+    print(f"throughput      : {args.batch * args.gen_len / dt:.1f} tok/s (CPU)")
+    print(f"first sequences : {out[:2, :12]}")
+
+
+if __name__ == "__main__":
+    main()

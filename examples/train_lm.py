@@ -1,0 +1,52 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch glm4-9b] [--steps 200]
+
+Uses the real framework stack - config -> data pipeline -> train_step with
+remat + microbatching -> AdamW -> async checkpointing -> watchdog - on a
+host-scale model of the chosen architecture family.  Loss on the synthetic
+copy-structured corpus should drop clearly within the first hundred steps.
+"""
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(message)s")
+
+    base = get_config(args.arch)
+    # ~100M-parameter family member (framework-scale config, CPU-trainable)
+    cfg = dataclasses.replace(
+        base,
+        n_layers=6 if not base.layer_pattern else 2 * len(base.layer_pattern),
+        d_model=512, d_ff=1408 if base.d_ff else 0,
+        n_heads=8 if base.n_heads else 0,
+        kv_heads=min(base.kv_heads, 4) if base.kv_heads else 0,
+        head_dim=64, vocab=8192,
+        n_experts=min(base.n_experts, 8),
+        local_window=128,
+        lru_width=512 if base.lru_width else None,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    run = RunConfig(model=cfg, mode="train", seq_len=256, global_batch=8,
+                    microbatch=4, remat="dots", learning_rate=1e-3)
+    trainer = Trainer(cfg, run, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                      log_every=10)
+    hist = trainer.run(args.steps)
+    print(f"loss: {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"({args.steps} steps, arch family {args.arch})")
+
+
+if __name__ == "__main__":
+    main()

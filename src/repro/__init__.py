@@ -1,0 +1,3 @@
+"""repro: BlockAMC (scalable in-memory analog matrix computing) in JAX,
+plus the multi-pod LM training/serving framework it is embedded in."""
+__version__ = "1.0.0"

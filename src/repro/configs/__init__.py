@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, RunConfig, SHAPES  # noqa: F401
+from repro.configs.registry import get_config, ARCHS  # noqa: F401

@@ -1,0 +1,8 @@
+"""BlockAMC core: the paper's contribution as composable JAX modules."""
+from repro.core.analog import AnalogConfig, IDEAL_CFG, G0_PAPER  # noqa: F401
+from repro.core.nonideal import (  # noqa: F401
+    NonidealConfig, IDEAL, PAPER_VARIATION, PAPER_FULL)
+from repro.core.blockamc import (  # noqa: F401
+    build_plan, build_original_plan, execute, solve, solve_original,
+    required_stages)
+from repro.core.metrics import relative_error, l2_relative_error  # noqa: F401

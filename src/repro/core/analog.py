@@ -1,0 +1,283 @@
+"""Behavioural models of the in-memory AMC circuits (paper Section II).
+
+Two primitives, built from the same components (RRAM crosspoint array + a
+column of amplifiers) in different feedback topologies:
+
+  MVM circuit (Fig. 1a):  v_out = -(G / G0) @ v_in
+  INV circuit (Fig. 1b):  v_out = -(G / G0)^-1 @ v_in
+
+Both primitives carry a minus sign from the negative-feedback amplifiers;
+Algorithm 1's cascade is arranged so the signs cancel.  We keep the signs
+explicit and faithful.
+
+Matrix mapping (paper Section IV): the matrix is normalised so its largest
+|element| equals 1, then mapped with unit conductance G0 = 100 uS.  Signed
+matrices are split A = A+ - A- onto two differential arrays (Section II.B),
+each subject to its *own* device noise - doubling the noise sources exactly
+as the hardware does.
+
+DAC/ADC interfaces: optional uniform quantisation of circuit inputs/outputs
+(paper Fig. 3-4 include 8-bit-class converters; ideal by default since the
+paper's accuracy study isolates device/wire effects).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nonideal
+from repro.core.nonideal import NonidealConfig
+
+G0_PAPER = 100e-6  # unit conductance, 100 uS
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """Static configuration of the AMC substrate."""
+    g0: float = G0_PAPER
+    array_size: int = 256          # max rows/cols of one physical array
+    nonideal: NonidealConfig = nonideal.IDEAL
+    dac_bits: Optional[int] = None  # None = ideal interface
+    adc_bits: Optional[int] = None
+    v_fullscale: float = 1.0        # converter full-scale (normalised units)
+    opa_gain: Optional[float] = None  # OPA open-loop gain; None = ideal OPA.
+    # Finite gain reproduces the HSPICE behaviour behind paper Fig. 6(c):
+    # the summing-node error scales with the row conductance sum (prop. to
+    # array size), so smaller BlockAMC arrays are *intrinsically* more
+    # accurate even with ideal device mapping.
+
+    def with_(self, **kw) -> "AnalogConfig":
+        return dataclasses.replace(self, **kw)
+
+
+IDEAL_CFG = AnalogConfig()
+
+
+# ---------------------------------------------------------------------------
+# Crossbar pair: differential mapping of one signed matrix block
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class CrossbarPair:
+    """A signed matrix block programmed on two differential RRAM arrays.
+
+    `gpos`/`gneg` are conductances in Siemens *after* programming noise.
+    `scale` is the single global normalisation factor c = 1 / max|A_orig|
+    shared by every array of one solver instance (the paper normalises the
+    original matrix once; per-block rescaling would break the analog cascade).
+    The circuit computes with  A_eff = (gpos_eff - gneg_eff) / g0,  which
+    approximates c * A_block.
+    """
+
+    def __init__(self, gpos, gneg, scale, g0):
+        self.gpos = gpos
+        self.gneg = gneg
+        self.scale = scale
+        self.g0 = g0
+
+    def tree_flatten(self):
+        return (self.gpos, self.gneg, self.scale), (self.g0,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        gpos, gneg, scale = children
+        return cls(gpos, gneg, scale, aux[0])
+
+    @property
+    def shape(self):
+        return self.gpos.shape
+
+    def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
+        """The matrix the circuit actually computes with (incl. wire model)."""
+        ni = cfg.nonideal
+        gp, gn = self.gpos, self.gneg
+        if ni.wire_model == "first_order" and ni.r_wire > 0.0:
+            gp = nonideal.effective_conductance(gp, ni.r_wire)
+            gn = nonideal.effective_conductance(gn, ni.r_wire)
+        return (gp - gn) / self.g0
+
+
+def map_matrix(a_block: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+               scale: jnp.ndarray) -> CrossbarPair:
+    """Program one signed block onto a differential crossbar pair.
+
+    `scale` is the solver-global normalisation 1/max|A_original| (a traced
+    scalar).  Programming noise is drawn independently for the two arrays.
+    """
+    a_norm = a_block * scale
+    gpos_t = jnp.maximum(a_norm, 0.0) * cfg.g0   # target conductances
+    gneg_t = jnp.maximum(-a_norm, 0.0) * cfg.g0
+    ni = cfg.nonideal
+    if ni.compensate_wire and ni.r_wire > 0.0:
+        # write-verify against the wire model (ref [29] mitigation)
+        gpos_t = nonideal.compensate_conductances(gpos_t, ni.r_wire)
+        gneg_t = nonideal.compensate_conductances(gneg_t, ni.r_wire)
+    kp, kn = jax.random.split(key)
+    sigma_g = ni.sigma * cfg.g0
+    gpos = nonideal.apply_variation(gpos_t, kp, sigma_g)
+    gneg = nonideal.apply_variation(gneg_t, kn, sigma_g)
+    return CrossbarPair(gpos, gneg, scale, cfg.g0)
+
+
+# ---------------------------------------------------------------------------
+# Converter interfaces
+# ---------------------------------------------------------------------------
+
+def quantize(v: jnp.ndarray, bits: Optional[int], fullscale: float) -> jnp.ndarray:
+    """Uniform mid-rise quantiser over [-fullscale, +fullscale]; clips."""
+    if bits is None:
+        return v
+    levels = 2 ** bits - 1
+    step = 2.0 * fullscale / levels
+    v = jnp.clip(v, -fullscale, fullscale)
+    return jnp.round(v / step) * step
+
+
+def dac(v: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    return quantize(v, cfg.dac_bits, cfg.v_fullscale)
+
+
+def adc(v: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    return quantize(v, cfg.adc_bits, cfg.v_fullscale)
+
+
+# ---------------------------------------------------------------------------
+# Circuit primitives (signed, faithful to Fig. 1)
+# ---------------------------------------------------------------------------
+
+def _row_load(pair: CrossbarPair, cfg: AnalogConfig) -> jnp.ndarray:
+    """Total physical conductance on each row summing node (both arrays)."""
+    return cfg.g0 + jnp.sum(pair.gpos + pair.gneg, axis=1)
+
+
+def amc_mvm(pair: CrossbarPair, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """MVM circuit: v_out = -A_eff @ v_in (TIA feedback sign included).
+
+    With finite OPA open-loop gain A_ol, the TIA summing node sits at
+    v_s = -v_out/A_ol instead of 0, giving
+        v_out = -(G v_in)_i / (G0 * (1 + (G0 + sum_j G_ij) / (A_ol G0))).
+    """
+    out = -(pair.a_eff(cfg) @ v_in)
+    if cfg.opa_gain is not None:
+        load = _row_load(pair, cfg)
+        out = out / (1.0 + load / (cfg.opa_gain * cfg.g0))
+    return out
+
+
+def amc_inv(pair: CrossbarPair, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """INV circuit equilibrium: G0 v_in + G v_out = 0 => v_out = -A_eff^-1 v_in.
+
+    The equilibrium of the nested feedback loops of Fig. 1(b); solved
+    digitally here (the behavioural stand-in for the one-step analog solve).
+    With finite OPA gain, KCL at summing node i (held at -v_out_i/A_ol)
+    adds a diagonal loading term:
+        (G + diag(load)/A_ol) v_out = -G0 v_in.
+    """
+    a = pair.a_eff(cfg)
+    if cfg.opa_gain is not None:
+        load = _row_load(pair, cfg) / (cfg.opa_gain * cfg.g0)
+        a = a + jnp.diag(load)
+    return -jnp.linalg.solve(a, v_in)
+
+
+# ---------------------------------------------------------------------------
+# Bit-sliced mapping (ISAAC-style; beyond-paper precision extension)
+# ---------------------------------------------------------------------------
+
+def map_matrix_sliced(a_block: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+                      scale: jnp.ndarray, n_slices: int = 2,
+                      bits_per_slice: int = 4):
+    """Map one signed block as `n_slices` arrays of `bits_per_slice` each.
+
+    Each slice stores a quantised digit of the target conductance at full
+    dynamic range (re-normalised to G0), so the per-device *absolute* noise
+    sigma*G0 is divided by the slice weight on recombination - the standard
+    in-memory-computing precision trick (ISAAC, ISCA'16).  Returns a list of
+    (CrossbarPair, weight); `amc_mvm_sliced` recombines digitally.
+    """
+    a_norm = a_block * scale
+    levels = 2 ** bits_per_slice
+    pairs = []
+    residual_pos = jnp.maximum(a_norm, 0.0)
+    residual_neg = jnp.maximum(-a_norm, 0.0)
+    keys = jax.random.split(key, n_slices)
+    sigma_g = cfg.nonideal.sigma * cfg.g0
+    for s in range(n_slices):
+        weight = float(levels) ** (-s)
+        # digit in [0, 1): quantise the residual at this significance
+        dig_p = jnp.floor(jnp.clip(residual_pos / weight, 0, 1 - 1e-9)
+                          * levels) / levels
+        dig_n = jnp.floor(jnp.clip(residual_neg / weight, 0, 1 - 1e-9)
+                          * levels) / levels
+        residual_pos = residual_pos - dig_p * weight
+        residual_neg = residual_neg - dig_n * weight
+        kp, kn = jax.random.split(keys[s])
+        gpos = nonideal.apply_variation(dig_p * cfg.g0, kp, sigma_g)
+        gneg = nonideal.apply_variation(dig_n * cfg.g0, kn, sigma_g)
+        pairs.append((CrossbarPair(gpos, gneg, scale, cfg.g0), weight))
+    return pairs
+
+
+def amc_mvm_sliced(pairs, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """MVM over bit-sliced arrays; digital shift-add recombination."""
+    out = None
+    for pair, weight in pairs:
+        part = amc_mvm(pair, v_in, cfg) * weight
+        out = part if out is None else out + part
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Partitioned MVM for blocks larger than one physical array (refs [13]-[15])
+# ---------------------------------------------------------------------------
+
+def map_tiled(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+              scale: jnp.ndarray):
+    """Map an (R x C) matrix onto a grid of <= array_size tiles.
+
+    Returns a list-of-lists of CrossbarPair (static tiling - sizes are
+    Python ints, so this unrolls at trace time as real hardware would be
+    physically laid out).  R and C need not be multiples of the array size.
+    """
+    s = cfg.array_size
+    rows, cols = a.shape
+    r_tiles = -(-rows // s)
+    c_tiles = -(-cols // s)
+    keys = jax.random.split(key, r_tiles * c_tiles)
+    grid = []
+    for ri in range(r_tiles):
+        row = []
+        for ci in range(c_tiles):
+            blk = a[ri * s:min((ri + 1) * s, rows), ci * s:min((ci + 1) * s, cols)]
+            row.append(map_matrix(blk, keys[ri * c_tiles + ci], cfg, scale))
+        grid.append(row)
+    return grid
+
+
+def amc_mvm_tiled(grid, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """Partitioned MVM: partial products per tile column, summed per tile row.
+
+    Analog partial sums: each tile's TIA output currents are summed along the
+    tile row (current summing is free in analog), so the sign convention is
+    identical to a single amc_mvm.
+    """
+    out_rows = []
+    for row in grid:
+        col_off = 0
+        acc = None
+        load = cfg.g0
+        for pair in row:
+            c = pair.shape[1]
+            part = -(pair.a_eff(cfg) @ v_in[col_off:col_off + c])
+            acc = part if acc is None else acc + part
+            load = load + jnp.sum(pair.gpos + pair.gneg, axis=1)
+            col_off += c
+        if cfg.opa_gain is not None:
+            # The tiles of one tile-row share the row TIAs (analog current
+            # summing), so the summing-node load is the whole tile-row's.
+            acc = acc / (1.0 + load / (cfg.opa_gain * cfg.g0))
+        out_rows.append(acc)
+    return jnp.concatenate(out_rows)

@@ -1,0 +1,216 @@
+"""BlockAMC: block-partitioned analog solver for A x = b (paper Section III).
+
+The original matrix A is partitioned
+
+        A = [[A1, A2],      b = [f,
+             [A3, A4]]           g]
+
+and the solve proceeds in five cascaded analog operations (Algorithm 1):
+
+    step 1  INV(A1):   -y_t = -A1^-1 f
+    step 2  MVM(A3):    g_t = -A3 (-y_t)
+    step 3  INV(A4s):   z   = -A4s^-1 (-g_s),  A4s = A4 - A3 A1^-1 A2,
+                                               -g_s = -g + g_t
+    step 4  MVM(A2):   -f_t = -A2 z
+    step 5  INV(A1):   -y   = -A1^-1 f_s,      f_s = f - f_t
+
+    x = [y; z]
+
+A4s (the Schur complement) is computed **digitally in advance** and programmed
+into its own array - the paper's stated pre-processing overhead.  Multi-stage
+solving recurses on the INV steps: every INV whose operand exceeds the
+physical array size is itself solved by BlockAMC, and oversized MVM operands
+use partitioned (tiled) MVM.  Two stages on a 256x256 system yields 16 arrays
+of 64x64, matching paper Fig. 8.
+
+The implementation is plan/execute:
+
+  * `build_plan(A, key, cfg, stages)` does everything that happens at
+    *programming time*: partitioning, digital Schur complements, matrix
+    normalisation, conductance mapping with per-array programming noise.
+  * `execute(plan, b, cfg)` runs the five-step cascade - the *analog runtime*
+    - reusing the programmed arrays for any number of right-hand sides.
+
+Both are pure functions of their inputs (vmap-able over noise keys for the
+paper's 40-seed Monte Carlo, and jit-able end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analog
+from repro.core.analog import AnalogConfig, CrossbarPair
+
+
+# ---------------------------------------------------------------------------
+# Plans (pytrees)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class LeafInvPlan:
+    """An INV operation small enough for one physical array."""
+
+    def __init__(self, pair: CrossbarPair):
+        self.pair = pair
+
+    def tree_flatten(self):
+        return (self.pair,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @property
+    def n(self):
+        return self.pair.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+class BlockPlan:
+    """One BlockAMC stage: INV plans for A1/A4s, tiled MVM grids for A2/A3."""
+
+    def __init__(self, inv1, mvm2, mvm3, inv4s, m):
+        self.inv1 = inv1      # plan for A1 (LeafInvPlan or BlockPlan)
+        self.mvm2 = mvm2      # tile grid for A2
+        self.mvm3 = mvm3      # tile grid for A3
+        self.inv4s = inv4s    # plan for A4s
+        self.m = m            # split point (static)
+
+    def tree_flatten(self):
+        return (self.inv1, self.mvm2, self.mvm3, self.inv4s), (self.m,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    @property
+    def n(self):
+        return self.inv1.n + self.inv4s.n
+
+
+Plan = Union[LeafInvPlan, BlockPlan]
+
+
+@dataclasses.dataclass
+class SolvePlan:
+    """Top-level plan: the recursive structure plus the global scale."""
+    root: Plan
+    scale: jnp.ndarray   # c = 1/max|A|; solution is descaled digitally
+
+
+jax.tree_util.register_dataclass(
+    SolvePlan, data_fields=["root", "scale"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Plan construction (programming time; digital pre-processing)
+# ---------------------------------------------------------------------------
+
+def required_stages(n: int, array_size: int) -> int:
+    """Smallest number of partitioning stages so every INV fits one array."""
+    stages = 0
+    while n > array_size:
+        n = -(-n // 2)
+        stages += 1
+    return stages
+
+
+def _build(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+           stages: int, scale: jnp.ndarray) -> Plan:
+    n = a.shape[0]
+    if stages == 0:
+        return LeafInvPlan(analog.map_matrix(a, key, cfg, scale))
+    # Paper: for odd n, A1 takes (n+1)/2; any square A1 works.
+    m = -(-n // 2)
+    a1, a2 = a[:m, :m], a[:m, m:]
+    a3, a4 = a[m:, :m], a[m:, m:]
+    # Digital pre-processing of the Schur complement (paper Eq. 3).  Done in
+    # f32 here, standing in for the host preprocessor in Fig. 3.
+    a4s = a4 - a3 @ jnp.linalg.solve(a1, a2)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return BlockPlan(
+        inv1=_build(a1, k1, cfg, stages - 1, scale),
+        mvm2=analog.map_tiled(a2, k2, cfg, scale),
+        mvm3=analog.map_tiled(a3, k3, cfg, scale),
+        inv4s=_build(a4s, k4, cfg, stages - 1, scale),
+        m=m,
+    )
+
+
+def build_plan(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+               stages: Optional[int] = None) -> SolvePlan:
+    """Partition, pre-process, normalise and 'program' matrix A.
+
+    stages=None auto-selects the minimum depth so leaves fit cfg.array_size
+    (stages=1 -> paper's one-stage solver, 2 -> two-stage, 0 -> original AMC).
+    """
+    n = a.shape[0]
+    if stages is None:
+        stages = required_stages(n, cfg.array_size)
+    # Global normalisation: largest |element| of the *original* matrix -> 1.
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    return SolvePlan(root=_build(a, key, cfg, stages, scale), scale=scale)
+
+
+def build_original_plan(a: jnp.ndarray, key: jax.Array,
+                        cfg: AnalogConfig) -> SolvePlan:
+    """The baseline 'original AMC': one monolithic INV array of size n.
+
+    Used by every paper comparison ('compared to a single AMC circuit
+    solving the same problem').  Ignores cfg.array_size deliberately.
+    """
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    return SolvePlan(root=LeafInvPlan(analog.map_matrix(a, key, cfg, scale)),
+                     scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Execution (analog runtime; five-step cascade per stage)
+# ---------------------------------------------------------------------------
+
+def _exec_inv(plan: Plan, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """Run an INV plan with the circuit sign convention: returns -A^-1 v_in."""
+    if isinstance(plan, LeafInvPlan):
+        return analog.amc_inv(plan.pair, v_in, cfg)
+    m = plan.m
+    f, g = v_in[:m], v_in[m:]
+    # --- Algorithm 1, signs kept exactly as the circuits produce them. ---
+    neg_yt = _exec_inv(plan.inv1, f, cfg)                 # step 1: -y_t
+    gt = analog.amc_mvm_tiled(plan.mvm3, neg_yt, cfg)     # step 2: -A3(-y_t) = g_t
+    neg_gs = -g + gt                                      # analog summation: -g_s
+    z = _exec_inv(plan.inv4s, neg_gs, cfg)                # step 3: -A4s^-1(-g_s) = +z
+    neg_ft = analog.amc_mvm_tiled(plan.mvm2, z, cfg)      # step 4: -f_t
+    fs = f + neg_ft                                       # f_s = f - f_t
+    neg_y = _exec_inv(plan.inv1, fs, cfg)                 # step 5: -y  (A1 reused)
+    # This function's contract is 'return -A^-1 v_in' = [-y; -z].
+    return jnp.concatenate([neg_y, -z])
+
+
+def execute(plan: SolvePlan, b: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
+    """Solve A x = b with the programmed plan; returns x (digitally descaled).
+
+    With the global normalisation A' = c A (c = plan.scale), the arrays hold
+    A' and the cascade's ADC output is  out = -(A')^-1 b = -(A^-1 b)/c, so the
+    host recovers  x = -c * out  - one sign flip and one scalar multiply in
+    the digital domain.
+    """
+    b_in = analog.dac(b, cfg)
+    out = _exec_inv(plan.root, b_in, cfg)       # = -(cA)^-1 b = -x/c
+    out = analog.adc(out, cfg)
+    return -plan.scale * out
+
+
+def solve(a: jnp.ndarray, b: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+          stages: Optional[int] = None) -> jnp.ndarray:
+    """Convenience: build_plan + execute."""
+    return execute(build_plan(a, key, cfg, stages), b, cfg)
+
+
+def solve_original(a: jnp.ndarray, b: jnp.ndarray, key: jax.Array,
+                   cfg: AnalogConfig) -> jnp.ndarray:
+    """Baseline: original (monolithic) AMC solve."""
+    return execute(build_original_plan(a, key, cfg), b, cfg)

@@ -1,0 +1,23 @@
+"""Accuracy metrics used throughout the paper's evaluation (Eq. 6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relative_error(x_ideal: jnp.ndarray, x_actual: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. (6): eps_r = | sum_i sqrt((x_i - xhat_i)^2) / sum_i sqrt(x_i^2) |.
+
+    Note sqrt((.)^2) == abs(.), i.e. this is an L1/L1 relative error. We keep
+    the paper's exact definition (not the L2 norm ratio).
+    Supports batched inputs: reduction is over the last axis.
+    """
+    num = jnp.sum(jnp.abs(x_ideal - x_actual), axis=-1)
+    den = jnp.sum(jnp.abs(x_ideal), axis=-1)
+    return jnp.abs(num / den)
+
+
+def l2_relative_error(x_ideal: jnp.ndarray, x_actual: jnp.ndarray) -> jnp.ndarray:
+    """Standard ||x - xhat|| / ||x||, reported alongside the paper metric."""
+    num = jnp.linalg.norm(x_ideal - x_actual, axis=-1)
+    den = jnp.linalg.norm(x_ideal, axis=-1)
+    return num / den

@@ -1,0 +1,1 @@
+from repro.data.matrices import wishart, toeplitz, random_rhs  # noqa: F401

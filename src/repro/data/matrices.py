@@ -1,0 +1,56 @@
+"""Benchmark matrix generators from the paper (Section IV.A).
+
+The paper evaluates on two matrix families:
+  * Wishart  A = X^T X with X an (m x n) real Gaussian matrix  (Eq. 4)
+  * Toeplitz A[i, j] = a_{i-j}, constant along diagonals       (Eq. 5)
+
+The paper does not state the Wishart aspect ratio m/n.  A square Wishart
+(m == n) is near-singular for large n (Marchenko-Pastur: smallest eigenvalue
+-> 0), which would make *any* solver's relative error diverge; the paper's
+reported error curves are stable across 40-seed Monte Carlo, which implies a
+well-conditioned ensemble.  We default to m = 4n (condition number
+((1+sqrt(1/4))/(1-sqrt(1/4)))^2 = 9, independent of n) and expose the ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wishart(key: jax.Array, n: int, *, aspect: float = 4.0,
+            dtype=jnp.float32) -> jnp.ndarray:
+    """Wishart matrix A = X^T X / m, X ~ N(0,1)^(m x n), m = aspect*n.
+
+    The 1/m scaling keeps element magnitudes O(1) across sizes; the paper
+    normalises to max-element 1 before mapping anyway, so scaling is free.
+    """
+    m = int(round(aspect * n))
+    x = jax.random.normal(key, (m, n), dtype=dtype)
+    return (x.T @ x) / m
+
+
+def toeplitz(key: jax.Array, n: int, *, decay: float = 1.0,
+             diag_boost: float = 2.0, dtype=jnp.float32) -> jnp.ndarray:
+    """Random Toeplitz matrix, invertible w.h.p.
+
+    Independent first row/column entries a_{-n+1..n-1} ~ N(0,1) damped by
+    1/(1+|k|)^decay, with the main diagonal boosted for diagonal dominance
+    (the paper needs invertible instances for the INV circuit to settle).
+    """
+    coeffs = jax.random.normal(key, (2 * n - 1,), dtype=dtype)
+    k = jnp.abs(jnp.arange(-(n - 1), n))
+    coeffs = coeffs / (1.0 + k.astype(dtype)) ** decay
+    coeffs = coeffs.at[n - 1].set(diag_boost * jnp.sign(coeffs[n - 1] + 1e-9)
+                                  * (jnp.abs(coeffs[n - 1]) + 1.0))
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    # A[i, j] = a_{i - j}; index into coeffs centred at n-1.
+    return coeffs[(i - j) + (n - 1)]
+
+
+def random_rhs(key: jax.Array, n: int, *, dtype=jnp.float32) -> jnp.ndarray:
+    """Random input vector b, uniform in [-1, 1] (DAC full-scale)."""
+    return jax.random.uniform(key, (n,), dtype=dtype, minval=-1.0, maxval=1.0)
+
+
+MATRIX_FAMILIES = {"wishart": wishart, "toeplitz": toeplitz}

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots:
+
+  crossbar_mvm - differential analog crossbar MVM simulation (DAC/ADC fused)
+  schur_gemm   - fused Schur-complement update A4 - A3 @ W
+
+Use repro.kernels.ops for the public (padded, jit'd) entry points and
+repro.kernels.ref for the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

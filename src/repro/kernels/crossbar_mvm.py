@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: differential analog crossbar MVM simulation.
+
+The Monte-Carlo hot spot of the whole reproduction: for every (seed x size x
+matrix family) cell of the paper's accuracy study, and for every partitioned
+MVM inside a BlockAMC cascade, we evaluate
+
+    out[b, r] = -ADC( sum_c (gpos[r, c] - gneg[r, c]) * DAC(v[b, c]) / g0 )
+
+i.e. a batched signed MVM with converter quantisation fused in.  On TPU this
+is a classic MXU matmul with a K-accumulation grid; the differential
+subtract, the DAC quantisation of the inputs and the ADC quantisation of the
+outputs are fused into the tile loop so conductances stream HBM->VMEM once.
+
+Tiling: (BB x BC) activation tiles and (BR x BC) conductance tiles in VMEM;
+MXU-aligned 128 multiples.  The kernel accumulates over the C grid axis in
+the output ref (revisited across c steps - standard Pallas accumulation).
+
+Hardware adaptation note (DESIGN.md): the analog circuit sums currents in
+space; the TPU sums partial products in time over the K grid axis.  The
+bit-exact quantiser placement (DAC before the sum, ADC after the *complete*
+sum) is preserved - ADC fires only on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize(v, bits: int | None, fullscale: float):
+    """Uniform mid-rise quantiser over [-fs, +fs]; None = ideal (no-op)."""
+    if bits is None:
+        return v
+    levels = 2 ** bits - 1
+    step = 2.0 * fullscale / levels
+    v = jnp.clip(v, -fullscale, fullscale)
+    return jnp.round(v / step) * step
+
+
+def _crossbar_mvm_kernel(v_ref, gpos_ref, gneg_ref, out_ref, *,
+                         n_ck: int, inv_g0: float,
+                         dac_bits: int | None, adc_bits: int | None,
+                         fullscale: float):
+    ck = pl.program_id(2)
+
+    @pl.when(ck == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = _quantize(v_ref[...].astype(jnp.float32), dac_bits, fullscale)
+    g = (gpos_ref[...] - gneg_ref[...]).astype(jnp.float32)
+    # (BB, BC) x (BR, BC)^T -> (BB, BR) on the MXU
+    out_ref[...] += jax.lax.dot_general(
+        v, g, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ck == n_ck - 1)
+    def _finish():
+        acc = out_ref[...] * (-inv_g0)
+        out_ref[...] = _quantize(acc, adc_bits, fullscale)
+
+
+def crossbar_mvm(v: jnp.ndarray, gpos: jnp.ndarray, gneg: jnp.ndarray, *,
+                 g0: float, dac_bits: int | None = None,
+                 adc_bits: int | None = None, fullscale: float = 1.0,
+                 block_b: int = 128, block_r: int = 128, block_c: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Batched differential crossbar MVM.
+
+    Args:
+      v:    (B, C) input voltage vectors.
+      gpos: (R, C) positive conductance array.
+      gneg: (R, C) negative conductance array.
+    Returns:
+      (B, R) float32: -ADC((gpos - gneg) @ DAC(v) / g0) per batch row.
+    Shapes must be multiples of the block sizes (ops.py pads ragged inputs).
+    """
+    b, c = v.shape
+    r, c2 = gpos.shape
+    assert c == c2 and gpos.shape == gneg.shape
+    assert b % block_b == 0 and r % block_r == 0 and c % block_c == 0, \
+        (v.shape, gpos.shape, (block_b, block_r, block_c))
+    n_ck = c // block_c
+    grid = (b // block_b, r // block_r, n_ck)
+    kernel = functools.partial(
+        _crossbar_mvm_kernel, n_ck=n_ck, inv_g0=1.0 / g0,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_r), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=interpret,
+    )(v, gpos, gneg)

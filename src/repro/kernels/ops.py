@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the Pallas kernels: padding, dtype policy,
+CPU-interpret fallback.
+
+On a CPU host (tests, this container) `interpret=True` executes the kernel
+body in Python per grid step; on TPU the same BlockSpecs compile to Mosaic.
+The wrappers pad ragged shapes up to the 128-aligned tile grid and slice the
+result back, so callers never see the alignment constraint.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crossbar_mvm as _xbar
+from repro.kernels import schur_gemm as _schur
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@partial(jax.jit, static_argnames=("g0", "dac_bits", "adc_bits", "fullscale",
+                                   "interpret"))
+def crossbar_mvm(v, gpos, gneg, *, g0: float, dac_bits=None, adc_bits=None,
+                 fullscale: float = 1.0, interpret: bool | None = None):
+    """Batched differential crossbar MVM; see kernels/crossbar_mvm.py.
+
+    v: (B, C), gpos/gneg: (R, C) -> (B, R).  Any shapes; pads to 128s.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, c = v.shape
+    r = gpos.shape[0]
+    blk = 128
+    vp = _pad_to(v, (blk, blk))
+    gp = _pad_to(gpos, (blk, blk))
+    gn = _pad_to(gneg, (blk, blk))
+    out = _xbar.crossbar_mvm(vp, gp, gn, g0=g0, dac_bits=dac_bits,
+                             adc_bits=adc_bits, fullscale=fullscale,
+                             interpret=interpret)
+    return out[:b, :r]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def schur_update(a4, a3, w, *, interpret: bool | None = None):
+    """Fused A4 - A3 @ W; see kernels/schur_gemm.py.  Any shapes; pads."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    i, j = a4.shape
+    blk = 128
+    a4p = _pad_to(a4, (blk, blk))
+    a3p = _pad_to(a3, (blk, blk))
+    wp = _pad_to(w, (blk, blk))
+    out = _schur.schur_update(a4p, a3p, wp, interpret=interpret)
+    return out[:i, :j]
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool | None = None):
+    """Blocked causal attention; see kernels/flash_attention.py.
+
+    q, k, v: (BH, S, D).  Pads S to 128 (padded keys are masked by
+    causality for the real rows; padded query rows are sliced away).
+    """
+    from repro.kernels import flash_attention as _fa
+    if interpret is None:
+        interpret = not _on_tpu()
+    bh, s, d = q.shape
+    blk = 128
+    # padded keys sit after every real query, so causality masks them;
+    # non-causal inputs must be pre-aligned.
+    assert causal or s % blk == 0, "non-causal flash requires S % 128 == 0"
+    qp = _pad_to(q, (1, blk, 1))
+    kp = _pad_to(k, (1, blk, 1))
+    vp = _pad_to(v, (1, blk, 1))
+    out = _fa.flash_attention(qp, kp, vp, causal=causal,
+                              interpret=interpret)
+    return out[:, :s, :]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _quantize(v, bits, fullscale):
+    if bits is None:
+        return v
+    levels = 2 ** bits - 1
+    step = 2.0 * fullscale / levels
+    v = jnp.clip(v, -fullscale, fullscale)
+    return jnp.round(v / step) * step
+
+
+def crossbar_mvm_ref(v, gpos, gneg, *, g0, dac_bits=None, adc_bits=None,
+                     fullscale=1.0):
+    """out[b, r] = -ADC(sum_c (gpos - gneg)[r, c] * DAC(v[b, c]) / g0)."""
+    vq = _quantize(v.astype(jnp.float32), dac_bits, fullscale)
+    g = (gpos - gneg).astype(jnp.float32)
+    out = -(vq @ g.T) / g0
+    return _quantize(out, adc_bits, fullscale)
+
+
+def schur_update_ref(a4, a3, w):
+    """A4 - A3 @ W in f32."""
+    return a4.astype(jnp.float32) - a3.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Plain softmax attention.  q, k, v: (BH, S, D)."""
+    import jax
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * (q.shape[-1] ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], q.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", w, v)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused Schur-complement update  A4s = A4 - A3 @ W.
+
+The digital pre-processing of every BlockAMC stage (paper Eq. 3) computes
+A4s = A4 - A3 A1^-1 A2.  With W = A1^-1 A2 from the leaf/block inverse, the
+remaining work is a GEMM whose accumulator is *initialised from A4* and
+*subtracts* the product - fusing the subtraction saves one full HBM
+round-trip of the (n/2)^2 output against a matmul-then-subtract pair.
+
+Grid (I, J, K) with K-accumulation in the output ref; MXU-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _schur_kernel(a4_ref, a3_ref, w_ref, out_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = a4_ref[...].astype(jnp.float32)
+
+    out_ref[...] -= jax.lax.dot_general(
+        a3_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def schur_update(a4: jnp.ndarray, a3: jnp.ndarray, w: jnp.ndarray, *,
+                 block_i: int = 128, block_j: int = 128, block_k: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """A4 - A3 @ W with the subtraction fused into the GEMM epilogue.
+
+    a4: (I, J), a3: (I, K), w: (K, J); multiples of block sizes (ops.py pads).
+    """
+    i, j = a4.shape
+    i2, k = a3.shape
+    k2, j2 = w.shape
+    assert i == i2 and j == j2 and k == k2
+    assert i % block_i == 0 and j % block_j == 0 and k % block_k == 0
+    n_k = k // block_k
+    grid = (i // block_i, j // block_j, n_k)
+    return pl.pallas_call(
+        functools.partial(_schur_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, block_j), lambda gi, gj, gk: (gi, gj)),
+            pl.BlockSpec((block_i, block_k), lambda gi, gj, gk: (gi, gk)),
+            pl.BlockSpec((block_k, block_j), lambda gi, gj, gk: (gk, gj)),
+        ],
+        out_specs=pl.BlockSpec((block_i, block_j), lambda gi, gj, gk: (gi, gj)),
+        out_shape=jax.ShapeDtypeStruct((i, j), jnp.float32),
+        interpret=interpret,
+    )(a4, a3, w)

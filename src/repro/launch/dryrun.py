@@ -1,0 +1,497 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+THE ONLY entry point that fakes 512 devices - the env var must be set before
+any other import touches jax (jax locks the device count at first init).
+
+Per cell this produces, without allocating any model-sized buffer:
+  * compiled.memory_analysis()  - proof the cell fits HBM,
+  * compiled.cost_analysis()    - HLO FLOPs / bytes for the roofline,
+  * a collective-bytes breakdown parsed from the partitioned HLO,
+  * the three roofline terms + dominant bottleneck (EXPERIMENTS.md S-Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ModelConfig, RunConfig, SHAPES
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tr
+from repro.optim.adamw import AdamW
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.sharding import api as shapi
+from repro.sharding import partition
+from repro.train.train_step import init_train_state, make_train_step
+
+# --- TPU v5e-class hardware constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (conservative single link)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Run-config presets (memory-budget policy per model size; DESIGN.md S5)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: tr.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    if cfg.n_experts == 0:
+        return param_count(cfg)
+    active = dataclasses.replace(cfg, n_experts=cfg.top_k)
+    return param_count(active)
+
+
+def make_run_config(cfg: ModelConfig, shape_key: str) -> RunConfig:
+    shape = SHAPES[shape_key]
+    n = param_count(cfg)
+    if shape["mode"] == "train":
+        if n >= 100e9:
+            extra = dict(fsdp=True, moments_dtype="bfloat16",
+                         microbatch=shape["global_batch"] // 16, remat="full",
+                         accum_dtype="bfloat16", seq_shard=True)
+        elif n >= 10e9:
+            extra = dict(fsdp=True, moments_dtype="float32",
+                         microbatch=shape["global_batch"] // 4, remat="full",
+                         seq_shard=True)
+        elif n >= 5e9:
+            extra = dict(fsdp=True, moments_dtype="float32",
+                         microbatch=shape["global_batch"] // 8, remat="full")
+        elif n >= 2e9:
+            extra = dict(fsdp=True, moments_dtype="float32",
+                         microbatch=shape["global_batch"] // 4, remat="full")
+        else:
+            # small models: dots-remat alone saves attention scores at
+            # (B_loc, H, S, S) f32 - 41 GB/chip at B=256; microbatch 4x
+            extra = dict(fsdp=True, remat="dots",
+                         microbatch=shape["global_batch"] // 4)
+        return RunConfig(model=cfg, **shape, **extra)
+    return RunConfig(model=cfg, **shape, fsdp=True, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, run: RunConfig) -> Dict[str, Any]:
+    b, s = run.global_batch, run.seq_len
+    if run.mode in ("train", "prefill"):
+        if cfg.frontend == "vit_stub":
+            batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if run.mode == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: tr.init_cache(b, s, cfg))
+    return {
+        "cache": cache,
+        "tokens_t": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def skip_reason(cfg: ModelConfig, shape_key: str) -> Optional[str]:
+    if shape_key == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k dense-KV decode excluded by the "
+                "shape key (needs sub-quadratic attention); see DESIGN.md")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cache_shapes, mesh: Mesh, rules) -> Any:
+    """KV leaves: (L?, B, S, KV, hd) -> batch on data, seq on model.
+    SSM/LRU states: batch on data only."""
+    batch_spec = rules["act_btd"][0]
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        nd = leaf.ndim
+        lead = (None,) if nd >= 3 and leaf.shape[0] != 0 and _has_layer_dim(path) else ()
+        core = leaf.shape[len(lead):]
+        if name in ("k", "v") and len(core) == 4:
+            spec = lead + (batch_spec, "model", None, None)
+            # drop axes that do not divide
+            spec = _fix(core, spec[len(lead):], mesh, lead)
+        elif name == "state":
+            spec = _fix(core, (batch_spec,) + (None,) * (len(core) - 1), mesh, lead)
+        else:
+            spec = _fix(core, (batch_spec,) + (None,) * (len(core) - 1), mesh, lead)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _has_layer_dim(path) -> bool:
+    return any(str(getattr(p, "key", "")) == "blocks" for p in path)
+
+
+def _axis_prod(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([dict(mesh.shape)[a] for a in ax]))
+    return dict(mesh.shape)[ax]
+
+
+def _fix(shape, spec, mesh, lead):
+    out = list(lead)
+    for dim, ax in zip(shape, spec):
+        out.append(ax if ax is not None and dim % _axis_prod(mesh, ax) == 0
+                   else None)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes of every collective in the partitioned HLO."""
+    out: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\S+) ([\w\-]+)\((.*)", stripped)
+        if not m:
+            continue
+        result_type, opname, rest = m.groups()
+        base = opname.rstrip("-start").rstrip("-done")
+        matched = None
+        for c in COLLECTIVES:
+            if opname == c or opname == c + "-start" or base == c:
+                matched = c
+                break
+        if matched is None:
+            continue
+        if opname.endswith("-done"):
+            continue   # counted at -start
+        # operand types appear inline: f32[..]{..} %name
+        op_types = re.findall(r"(\w+\[[\d,]*\])(?:\{[^}]*\})? %?[\w.\-]+",
+                              rest)
+        if op_types:
+            nbytes = sum(_type_bytes(t) for t in op_types)
+        else:
+            nbytes = _type_bytes(result_type)
+        out[matched]["count"] += 1
+        out[matched]["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The dry-run itself
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_key: str, *, multi_pod: bool = False,
+               run_override=None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_key)
+    if reason:
+        return {"arch": arch, "shape": shape_key, "skipped": reason}
+    run = run_override or make_run_config(cfg, shape_key)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(dict(mesh.shape).values())))
+    rules = partition.activation_rules(mesh, cfg, run)
+    policy = partition.make_policy(mesh, cfg, run)
+    t0 = time.time()
+
+    with shapi.policy_scope(policy):
+        if run.mode == "train":
+            opt = AdamW(lr=run.learning_rate,
+                        moments_dtype={"float32": jnp.float32,
+                                       "bfloat16": jnp.bfloat16}[run.moments_dtype])
+            state_shapes = jax.eval_shape(
+                lambda k: init_train_state(k, cfg, run, opt)[0],
+                jax.random.PRNGKey(0))
+            state_sh = partition.make_state_shardings(state_shapes, mesh,
+                                                      run.fsdp)
+            batch_specs = input_specs(cfg, run)
+            batch_sh = jax.tree.map(
+                lambda x: NamedSharding(
+                    mesh, rules["act_btd"] if x.ndim == 3 else
+                    P(rules["act_btd"][0], None)), batch_specs)
+            step = make_train_step(cfg, run, opt,
+                                   grad_shardings=state_sh.params)
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_specs)
+        elif run.mode == "prefill":
+            params_shapes = jax.eval_shape(
+                lambda k: tr.init_params(k, cfg), jax.random.PRNGKey(0))
+            params_sh = partition.make_param_shardings(params_shapes, mesh,
+                                                       fsdp=True)
+            batch_specs = input_specs(cfg, run)
+            batch_sh = jax.tree.map(
+                lambda x: NamedSharding(
+                    mesh, rules["act_btd"] if x.ndim == 3 else
+                    P(rules["act_btd"][0], None)), batch_specs)
+            cache_like = jax.eval_shape(
+                lambda: tr.init_cache(run.global_batch, run.seq_len, cfg))
+            cache_sh = cache_shardings(cache_like, mesh, rules)
+            fn = make_prefill_step(cfg, cache_len=run.seq_len)
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_shapes, batch_specs)
+        else:   # decode
+            params_shapes = jax.eval_shape(
+                lambda k: tr.init_params(k, cfg), jax.random.PRNGKey(0))
+            params_sh = partition.make_param_shardings(params_shapes, mesh,
+                                                       fsdp=True)
+            specs = input_specs(cfg, run)
+            cache_sh = cache_shardings(specs["cache"], mesh, rules)
+            fn = make_decode_step(cfg)
+
+            def step(p, c, t, pos):
+                return fn(p, c, t, pos, None)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, None, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, specs["cache"],
+                                   specs["tokens_t"], specs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses ----
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:   # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        raw_flops = float(cost.get("flops", -1))
+        raw_bytes = float(cost.get("bytes accessed", -1))
+    except Exception as e:
+        raw_flops, raw_bytes = -1.0, -1.0
+
+    # Loop-aware accounting (cost_analysis counts while bodies once; see
+    # hlo_analysis docstring).  This is the roofline source of truth.
+    hlo = compiled.as_text()
+    acc = hlo_analysis.analyze(hlo)
+    flops = acc["flops"]
+    bytes_accessed = acc["bytes"]
+    coll = acc["collectives"]
+    coll_bytes = acc["collective_bytes"]
+
+    # ---- roofline terms (per chip; HLO module is already per-device) ----
+    compute_term = flops / PEAK_FLOPS if flops > 0 else None
+    memory_term = bytes_accessed / HBM_BW if bytes_accessed > 0 else None
+    collective_term = coll_bytes / LINK_BW
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": collective_term}
+    valid = {k: v for k, v in terms.items() if v is not None}
+    dominant = max(valid, key=valid.get) if valid else None
+
+    n_active = active_param_count(cfg)
+    if run.mode == "train":
+        model_flops = 6.0 * n_active * run.global_batch * run.seq_len
+    elif run.mode == "prefill":
+        model_flops = 2.0 * n_active * run.global_batch * run.seq_len
+    else:
+        model_flops = 2.0 * n_active * run.global_batch
+    useful_ratio = (model_flops / n_chips) / flops if flops > 0 else None
+
+    return {
+        "arch": arch, "shape": shape_key,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "mode": run.mode,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": coll_bytes,
+        "collectives": coll,
+        "bytes_by_op": acc.get("by_op", {}),
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+        "hlo_warnings": acc["warnings"][:5],
+        "memory": mem_info,
+        "roofline": terms,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "n_active_params": n_active,
+        "useful_flop_ratio": useful_ratio,
+    }
+
+
+def lower_solver_cell(*, n: int = 16384, stages: int = 2,
+                      multi_pod: bool = False) -> Dict[str, Any]:
+    """Dry-run the paper's own technique: the distributed BlockAMC solver
+    (plan build + five-step cascade) lowered on the production mesh.
+
+    A is sharded (data, model); the GEMM-only Schur pre-processing and the
+    vectorised tile MVMs shard under GSPMD; leaf INVs gather small blocks.
+    """
+    from repro.core import distributed
+    from repro.core.analog import AnalogConfig
+    from repro.core.nonideal import NonidealConfig
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(dict(mesh.shape).values())))
+    cfg = AnalogConfig(array_size=256, nonideal=NonidealConfig(sigma=0.05))
+    t0 = time.time()
+
+    def solve(a, b, key):
+        return distributed.solve_distributed(a, b, key, cfg, stages=stages,
+                                             mesh=mesh)
+
+    a_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    key_spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    a_sh = NamedSharding(mesh, P("data", "model"))
+    lowered = jax.jit(solve, in_shardings=(a_sh, None, None)).lower(
+        a_spec, b_spec, key_spec)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    acc = hlo_analysis.analyze(compiled.as_text())
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {"argument_bytes": mem.argument_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes}
+    except Exception as e:
+        mem_info = {"error": str(e)}
+    terms = {"compute_s": acc["flops"] / PEAK_FLOPS,
+             "memory_s": acc["bytes"] / HBM_BW,
+             "collective_s": acc["collective_bytes"] / LINK_BW}
+    model_flops = 2.0 / 3.0 * n ** 3 * 2 * 2   # block-inv ~2x one LU(2/3 n^3)
+    return {"arch": "blockamc-solver", "shape": f"n{n}_s{stages}",
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": n_chips, "mode": "solve",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "flops_per_chip": acc["flops"], "bytes_per_chip": acc["bytes"],
+            "collective_bytes_per_chip": acc["collective_bytes"],
+            "collectives": acc["collectives"], "memory": mem_info,
+            "roofline": terms,
+            "dominant": max(terms, key=terms.get),
+            "model_flops_global": model_flops,
+            "useful_flop_ratio": (model_flops / n_chips) / max(acc["flops"], 1),
+            "bytes_by_op": acc.get("by_op", {})}
+
+
+def cell_path(arch: str, shape_key: str, multi_pod: bool) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape_key}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--solver", action="store_true",
+                    help="dry-run the distributed BlockAMC solver cell")
+    args = ap.parse_args()
+
+    if args.solver:
+        result = lower_solver_cell(multi_pod=args.multi_pod)
+        path = cell_path("blockamc-solver", result["shape"], args.multi_pod)
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"solver cell: dominant={result['dominant']} "
+              f"terms={result['roofline']} (compile {result['compile_s']}s)")
+        return
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        path = cell_path(arch, shape, args.multi_pod)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip-cached] {arch} {shape}")
+            continue
+        print(f"[dryrun] {arch} {shape} multi_pod={args.multi_pod} ...",
+              flush=True)
+        try:
+            result = lower_cell(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:
+            result = {"arch": arch, "shape": shape,
+                      "mesh": "2x16x16" if args.multi_pod else "16x16",
+                      "error": f"{type(e).__name__}: {e}"}
+            print(f"  ERROR: {e}")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        if "roofline" in result:
+            print(f"  ok: dominant={result['dominant']} "
+                  f"terms={result['roofline']} "
+                  f"(compile {result['compile_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,383 @@
+"""Loop-aware roofline accounting over optimized (post-SPMD) HLO text.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, which makes
+scan-over-layers models look L-times cheaper than they are (verified:
+scan-of-10-matmuls reports 1/10th the flops of its unrolled twin).  This
+module re-derives the three roofline inputs by walking the HLO call graph
+with loop-trip multipliers:
+
+  flops            - 2*prod(result)*prod(contracting dims) per dot,
+                     recursively through fusions/calls/whiles (x trips).
+  hbm bytes        - operand+result bytes of every top-level instruction in
+                     each computation (fusion internals excluded: a fusion
+                     touches HBM only at its boundary), x trips.
+  collective bytes - operand bytes per collective op, x trips.
+
+Trip counts come from the integer bound in the while condition computation
+(jax scans lower to `compare(iv, constant(N)), direction=LT`); dynamic
+bounds fall back to 1 with a warning.  Conditionals take the max branch.
+Elementwise flops are not counted (dot-dominated models; documented in
+EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_TOKEN = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HEADER = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_BODY_SPLIT = re.compile(r"((?:\([^=]*?\)|[^\s(]+))\s+([\w\-]+)\((.*)$")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "copy-start", "copy-done", "reshape", "while", "conditional", "call",
+}
+
+_BYTES_OPS_EXTRA = {
+    "copy", "transpose", "broadcast", "reduce", "sort", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "pad", "concatenate", "select",
+    "convert", "slice", "reverse", "map", "reduce-window", "convolution",
+    "custom-call", "rng", "cholesky", "triangular-solve", "compare", "dot",
+    "fusion", "add", "multiply", "subtract", "divide", "exponential", "tanh",
+    "select-and-scatter", "clamp", "maximum", "minimum", "rsqrt", "negate",
+}
+
+
+def _tensor_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_elems(type_str: str) -> float:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return 0.0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return float(n)
+
+
+class Instr:
+    __slots__ = ("name", "opcode", "line", "result_type", "operands", "attrs")
+
+    def __init__(self, name: str, body: str, line: str):
+        self.name = name
+        self.line = line
+        # result type: balanced-paren tuple (may contain /*index=N*/ comments)
+        # or a single whitespace-free token.
+        body = body.lstrip()
+        if body.startswith("("):
+            depth = 0
+            end = -1
+            for i, ch in enumerate(body):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            if end < 0:
+                self.result_type, self.opcode = "", ""
+                self.operands, self.attrs = [], ""
+                return
+            self.result_type = body[:end + 1]
+            tail = body[end + 1:].lstrip()
+        else:
+            parts = body.split(None, 1)
+            self.result_type = parts[0]
+            tail = parts[1] if len(parts) > 1 else ""
+        m = re.match(r"([\w\-]+)\((.*)$", tail)
+        if not m:
+            self.result_type, self.opcode = self.result_type, ""
+            self.operands, self.attrs = [], ""
+            return
+        self.opcode, rest = m.groups()
+        # split operand segment from attrs at the balanced closing paren
+        depth = 1
+        cut = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    cut = i
+                    break
+        operand_seg = rest[:cut]
+        self.attrs = rest[cut + 1:]
+        self.operands = re.findall(r"%([\w.\-]+)", operand_seg)
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    types: Dict[str, str] = {}
+    entry = ""
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = _COMP_HEADER.match(line)
+        if header:
+            current = header.group(2)
+            comps[current] = []
+            if header.group(1):
+                entry = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), line)
+            comps[current].append(ins)
+            types[ins.name] = ins.result_type
+    return comps, types, entry
+
+
+def analyze(hlo: str) -> Dict:
+    comps, types, entry = parse_computations(hlo)
+    warnings: List[str] = []
+    cache: Dict[str, Dict] = {}
+
+    def operand_bytes(ins: Instr) -> int:
+        return sum(_tensor_bytes(types.get(o, "")) for o in ins.operands)
+
+    def is_convert_only(comp_name: Optional[str]) -> bool:
+        """True for fusions that only change dtype/layout (convert/bitcast/
+        reshape chains).  XLA CPU materialises f32 copies of bf16 tensors
+        around dots (no native bf16); on the TPU target these fusions do not
+        exist, so their traffic is discounted (EXPERIMENTS.md S-Roofline)."""
+        body = comps.get(comp_name or "", [])
+        saw_work = False
+        for bi in body:
+            if bi.opcode in ("parameter", "tuple", "get-tuple-element"):
+                continue
+            if bi.opcode not in ("convert", "bitcast", "reshape", "copy"):
+                return False
+            saw_work = True
+        return saw_work
+
+    def fusion_io_bytes(ins: Instr, comp_name: Optional[str]) -> float:
+        """Boundary traffic of a fusion: result + operands, where an operand
+        that is only dynamic-slice'd/slice'd inside the fused computation is
+        charged at the slice-result size (XLA input fusions take the whole
+        stacked scan parameter as an operand but only read one layer's
+        slice per trip - charging the full tensor would overcount by L)."""
+        if is_convert_only(comp_name):
+            return 0.0
+        total = float(_tensor_bytes(ins.result_type))
+        body = comps.get(comp_name or "", [])
+        # parameter lines look like: %p = TYPE parameter(IDX)
+        param_idx = {}
+        for bi in body:
+            pm = re.search(r"parameter\((\d+)\)", bi.line)
+            if pm and bi.opcode == "parameter":
+                param_idx[bi.name] = int(pm.group(1))
+        sliced_ok: Dict[str, float] = {}
+        for pname in param_idx:
+            consumers = [bi for bi in body if pname in bi.operands]
+            if consumers and all(bi.opcode in ("dynamic-slice", "slice",
+                                               "gather")
+                                 for bi in consumers):
+                sliced_ok[pname] = sum(
+                    _tensor_bytes(bi.result_type) for bi in consumers)
+        for pname, idx in param_idx.items():
+            if idx >= len(ins.operands):
+                continue
+            full = _tensor_bytes(types.get(ins.operands[idx], ""))
+            total += min(sliced_ok.get(pname, full), full) if pname in sliced_ok \
+                else full
+        if not param_idx:   # fallback: no parsable body
+            total += operand_bytes(ins)
+        return total
+
+    def dot_flops(ins: Instr) -> float:
+        result = _result_elems(ins.result_type)
+        mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        lhs_type = types.get(ins.operands[0], "") if ins.operands else ""
+        sm = _SHAPE_TOKEN.search(lhs_type)
+        if not sm:
+            return 0.0
+        lhs_shape = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        if mdims:
+            for d in mdims.group(1).split(","):
+                if d and int(d) < len(lhs_shape):
+                    contract *= lhs_shape[int(d)]
+        return 2.0 * result * contract
+
+    def trip_count(cond_name: str) -> float:
+        best = None
+        for ins in comps.get(cond_name, []):
+            m = re.search(r"\b[su]\d+\[\]\s+constant\((\d+)\)", ins.line)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+        if best is None or best <= 0:
+            warnings.append(f"while cond {cond_name}: non-constant bound, trip=1")
+            return 1.0
+        return float(best)
+
+    def attr_comp(ins: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-]+)", ins.attrs)
+        if m and m.group(1) in comps:
+            return m.group(1)
+        return None
+
+    def attr_comps(ins: Instr, key: str) -> List[str]:
+        m = re.search(key + r"=\{([^}]*)\}", ins.attrs)
+        if not m:
+            single = attr_comp(ins, key)
+            return [single] if single else []
+        out = []
+        for nm in m.group(1).split(","):
+            nm = nm.strip().lstrip("%")
+            if nm in comps:
+                out.append(nm)
+        return out
+
+    def zero():
+        return {"flops": 0.0, "bytes": 0.0, "by_op": {},
+                "coll": {c: {"count": 0.0, "bytes": 0.0} for c in COLLECTIVES}}
+
+    def add_scaled(dst, src, scale=1.0):
+        dst["flops"] += scale * src["flops"]
+        dst["bytes"] += scale * src["bytes"]
+        for op, b in src["by_op"].items():
+            dst["by_op"][op] = dst["by_op"].get(op, 0.0) + scale * b
+        for c in COLLECTIVES:
+            dst["coll"][c]["count"] += scale * src["coll"][c]["count"]
+            dst["coll"][c]["bytes"] += scale * src["coll"][c]["bytes"]
+
+    def comp_cost(name: str) -> Dict:
+        if name in cache:
+            return cache[name]
+        cache[name] = zero()   # cycle guard
+        total = zero()
+        for ins in comps.get(name, []):
+            op = ins.opcode
+            if not op:
+                continue
+            if op == "dot":
+                total["flops"] += dot_flops(ins)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES and not op.endswith("-done"):
+                nbytes = operand_bytes(ins) or _tensor_bytes(ins.result_type)
+                total["coll"][base]["count"] += 1
+                total["coll"][base]["bytes"] += nbytes
+            if op not in _SKIP_BYTES_OPS:
+                if op == "fusion":
+                    b = fusion_io_bytes(ins, attr_comp(ins, "calls"))
+                else:
+                    b = operand_bytes(ins) + _tensor_bytes(ins.result_type)
+                total["bytes"] += b
+                total["by_op"][op] = total["by_op"].get(op, 0.0) + b
+            if op == "while":
+                body = attr_comp(ins, "body")
+                cond = attr_comp(ins, "condition")
+                trips = trip_count(cond) if cond else 1.0
+                if body:
+                    # Body instructions account their own HBM traffic
+                    # (dynamic-slice/dus of the carried state); charging the
+                    # full carry tuple per trip would double-count massively.
+                    add_scaled(total, comp_cost(body), trips)
+            elif op == "conditional":
+                branches = attr_comps(ins, "branch_computations")
+                if not branches:
+                    branches = [c for key in ("true_computation",
+                                              "false_computation")
+                                for c in ([attr_comp(ins, key)] if attr_comp(ins, key) else [])]
+                subs = [comp_cost(b) for b in branches]
+                if subs:
+                    add_scaled(total, max(
+                        subs, key=lambda s: s["flops"] + s["bytes"]))
+            elif op in ("fusion", "call", "async-start"):
+                key = "calls" if op == "fusion" else "to"
+                sub_name = attr_comp(ins, key) or attr_comp(ins, "calls")
+                if sub_name:
+                    sub = comp_cost(sub_name)
+                    # fusion internals stay in registers/VMEM: only flops and
+                    # collectives flow up; calls propagate bytes too.
+                    scale_bytes = 1.0 if op == "call" else 0.0
+                    total["flops"] += sub["flops"]
+                    total["bytes"] += scale_bytes * sub["bytes"]
+                    for c in COLLECTIVES:
+                        total["coll"][c]["count"] += sub["coll"][c]["count"]
+                        total["coll"][c]["bytes"] += sub["coll"][c]["bytes"]
+        cache[name] = total
+        return total
+
+    # effective execution multiplier per computation (for diagnostics)
+    multipliers: Dict[str, float] = {}
+
+    def propagate(name: str, mult: float, depth=0):
+        if depth > 50:
+            return
+        multipliers[name] = multipliers.get(name, 0.0) + mult
+        for ins in comps.get(name, []):
+            if ins.opcode == "while":
+                body = attr_comp(ins, "body")
+                cond = attr_comp(ins, "condition")
+                trips = trip_count(cond) if cond else 1.0
+                if body:
+                    propagate(body, mult * trips, depth + 1)
+            elif ins.opcode in ("fusion", "call", "async-start", "conditional"):
+                for sub in called_comps_of(ins):
+                    propagate(sub, mult, depth + 1)
+
+    def called_comps_of(ins: Instr) -> List[str]:
+        out = []
+        for key in ("calls", "to", "branch_computations"):
+            out.extend(attr_comps(ins, key))
+        return out
+
+    if not entry:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0,
+                "warnings": ["no ENTRY computation found"]}
+    result = comp_cost(entry)
+    coll_bytes = sum(v["bytes"] for v in result["coll"].values())
+    propagate(entry, 1.0)
+    top: List = []
+    for cname, mult in multipliers.items():
+        for ins in comps.get(cname, []):
+            if ins.opcode in _SKIP_BYTES_OPS or not ins.opcode:
+                continue
+            if ins.opcode == "fusion":
+                b = fusion_io_bytes(ins, attr_comp(ins, "calls"))
+            else:
+                b = operand_bytes(ins) + _tensor_bytes(ins.result_type)
+            if b:
+                top.append((b * mult, ins.opcode, ins.result_type[:48],
+                            cname[:40], mult))
+    top.sort(key=lambda x: -x[0])
+    return {"flops": result["flops"], "bytes": result["bytes"],
+            "by_op": dict(sorted(result["by_op"].items(),
+                                 key=lambda kv: -kv[1])[:12]),
+            "top_instrs": [
+                {"gbytes": round(b / 1e9, 2), "op": op, "type": t,
+                 "comp": c, "mult": m} for b, op, t, c, m in top[:16]],
+            "collectives": result["coll"], "collective_bytes": coll_bytes,
+            "warnings": warnings}

@@ -1,0 +1,66 @@
+"""Training launcher: --arch <id> --shape train_4k [--steps N] [--host-scale].
+
+On the production pod this process runs per host with jax.distributed;
+on this container it runs the same code path at a reduced (host) scale:
+`--host-scale` shrinks the model to a trainable-on-CPU config with the same
+family/topology, which is what examples/train_lm.py uses end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.train.trainer import Trainer
+
+log = logging.getLogger("repro.launch.train")
+
+
+def host_scale_config(cfg):
+    """Shrink an arch config to a ~CPU-trainable size, same topology."""
+    return dataclasses.replace(
+        cfg,
+        n_layers=min(cfg.n_layers, 4 if not cfg.layer_pattern else
+                     2 * len(cfg.layer_pattern)),
+        d_model=256, d_ff=512 if cfg.d_ff else 0,
+        n_heads=4 if cfg.n_heads else 0,
+        kv_heads=min(cfg.kv_heads, 2) if cfg.kv_heads else 0,
+        head_dim=64, vocab=min(cfg.vocab, 2048),
+        n_experts=min(cfg.n_experts, 4), local_window=64,
+        lru_width=256 if cfg.lru_width else None,
+        ssm_chunk=32,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--host-scale", action="store_true",
+                    help="shrink model + batch for single-host runs")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = get_config(args.arch)
+    shape = dict(SHAPES[args.shape])
+    if args.host_scale:
+        cfg = host_scale_config(cfg)
+        shape.update(seq_len=min(shape["seq_len"], 128),
+                     global_batch=min(shape["global_batch"], 8))
+    run = RunConfig(model=cfg, **shape)
+    trainer = Trainer(cfg, run, ckpt_dir=args.ckpt_dir, seed=args.seed)
+    history = trainer.run(args.steps)
+    first, last = history["loss"][0], history["loss"][-1]
+    log.info("done: loss %.4f -> %.4f over %d steps", first, last, args.steps)
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM architecture zoo: layers, attention, MoE, SSM, RG-LRU, assembly."""

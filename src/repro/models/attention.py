@@ -1,0 +1,201 @@
+"""GQA attention: chunked-causal for train/prefill, ring-buffer KV decode.
+
+Memory discipline: scores are never materialised at (S x S) - queries are
+processed in static chunks via lax.scan (flash-style blocking, the TPU-native
+adaptation of memory-efficient attention), so a 32k prefill peaks at
+(chunk x S) per (batch, head) shard.  Local (sliding-window) attention
+restricts the KV cache to the window - this is what makes recurrentgemma's
+long_500k decode O(window) instead of O(S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_dense, rope
+from repro.sharding import shard
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    return {
+        "wq": init_dense(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": init_dense(k2, cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wv": init_dense(k3, cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wo": init_dense(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _qkv(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+         cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"]).reshape(b, s, cfg.kv_heads, hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attend(q, k, v, positions, cfg: ModelConfig,
+                    window: Optional[int], q_chunk: int) -> jnp.ndarray:
+    """Flash-style q-chunked causal attention core, flat-head layout.
+
+    q: (B, S, H, hd); k, v: (B, S, KV, hd) - KV heads are broadcast to H
+    (GQA semantics: query head h reads kv head h // q_per_kv), which keeps
+    every activation 4-D with a head axis shardable over the TP mesh axis
+    ("act_bshd" rule); 40-head archs that don't divide the axis fall back to
+    sequence (context-parallel) sharding of k/v instead ("act_kv_seq").
+    """
+    b, s = q.shape[0], q.shape[1]
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    if cfg.q_per_kv > 1:
+        k = jnp.repeat(k, cfg.q_per_kv, axis=2)    # (B, S, H, hd)
+        v = jnp.repeat(v, cfg.q_per_kv, axis=2)
+    k = shard(k, "act_kv")
+    v = shard(v, "act_kv")
+    q = shard(q, "act_q")
+    q_chunk = min(q_chunk, s)
+    assert s % q_chunk == 0, (s, q_chunk)
+    n_chunks = s // q_chunk
+
+    qc = q.reshape(b, n_chunks, q_chunk, cfg.n_heads, hd)
+    qc = jnp.moveaxis(qc, 1, 0)                    # (C, B, qc, H, hd)
+    pc = positions.reshape(b, n_chunks, q_chunk)
+    pc = jnp.moveaxis(pc, 1, 0)                    # (C, B, qc)
+
+    def one_chunk(carry, inp):
+        q_i, pos_i = inp
+        scores = jnp.einsum("bqhd,bshd->bhqs", q_i, k) * scale
+        mask = pos_i[:, None, :, None] >= positions[:, None, None, :]
+        if window is not None:
+            near = (pos_i[:, None, :, None]
+                    - positions[:, None, None, :]) < window
+            mask = jnp.logical_and(mask, near)
+        scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+        out_i = jnp.einsum("bhqs,bshd->bqhd", w, v)
+        return carry, out_i
+
+    _, out = jax.lax.scan(one_chunk, None, (qc, pc))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads * hd)
+
+
+def attention(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, *, window: Optional[int] = None,
+              q_chunk: int = 1024, use_flash: bool = False) -> jnp.ndarray:
+    """Causal (optionally sliding-window) self-attention.
+
+    x: (B, S, d) -> (B, S, d).  positions: (B, S) absolute positions.
+    use_flash routes full-causal attention through the Pallas flash kernel
+    (TPU target; interpret on CPU) - the beyond-paper prefill optimisation.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    if use_flash and window is None:
+        from repro.kernels import ops as kops
+        g = cfg.q_per_kv
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        hd = cfg.head_dim
+        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(
+            b * cfg.n_heads, s, hd)
+        out = kops.flash_attention(fold(q), fold(k), fold(v), causal=True)
+        out = out.reshape(b, cfg.n_heads, s, hd).transpose(0, 2, 1, 3)
+        return out.reshape(b, s, cfg.n_heads * hd) @ params["wo"]
+    out = _chunked_attend(q, k, v, positions, cfg, window, q_chunk)
+    return out @ params["wo"]
+
+
+def attention_prefill(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                      cfg: ModelConfig, cache_len: int, *,
+                      window: Optional[int] = None, q_chunk: int = 1024,
+                      cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    """Full forward that also emits the KV cache for subsequent decode.
+
+    Full-attention caches are laid out [0..S) with tail zeros; sliding-window
+    caches are ring buffers (slot = pos % window) matching attention_decode.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _chunked_attend(q, k, v, positions, cfg, window, q_chunk)
+
+    if window is not None:
+        w_eff = min(window, s)
+        slots = (jnp.arange(s - w_eff, s)) % cache_len
+        cache_k = jnp.zeros((b, cache_len) + k.shape[2:], cache_dtype)
+        cache_v = jnp.zeros_like(cache_k)
+        cache_k = cache_k.at[:, slots].set(k[:, -w_eff:].astype(cache_dtype))
+        cache_v = cache_v.at[:, slots].set(v[:, -w_eff:].astype(cache_dtype))
+    else:
+        pad = cache_len - s
+        cache_k = jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out @ params["wo"], {"k": cache_k, "v": cache_v}
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, cfg: ModelConfig,
+                  dtype=jnp.bfloat16) -> Dict:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.kv_heads, hd), dtype=dtype),
+    }
+
+
+def attention_decode(params: Dict, x_t: jnp.ndarray, cache: Dict,
+                     pos: jnp.ndarray, cfg: ModelConfig, *,
+                     window: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.  x_t: (B, 1, d); pos: scalar OR (B,) positions.
+
+    Per-slot positions are what enable continuous batching: each sequence in
+    the batch advances independently (new admissions restart at 0 while
+    others keep generating).  Full-attention caches hold the whole context;
+    sliding-window caches are ring buffers of length `window` - the
+    sub-quadratic long-context path.
+    """
+    b = x_t.shape[0]
+    hd = cfg.head_dim
+    cache_len = cache["k"].shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_b[:, None]
+    q, k_t, v_t = _qkv(params, x_t, positions, cfg)
+
+    slot_b = pos_b % cache_len if window is not None else pos_b
+    upd = jax.vmap(
+        lambda c, kt, s: jax.lax.dynamic_update_slice_in_dim(
+            c, kt, s, axis=0))
+    k = upd(cache["k"], k_t.astype(cache["k"].dtype), slot_b)
+    v = upd(cache["v"], v_t.astype(cache["v"].dtype), slot_b)
+    k = shard(k, "act_cache")
+    v = shard(v, "act_cache")
+
+    g = cfg.q_per_kv
+    q = q.reshape(b, 1, cfg.kv_heads, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * (hd ** -0.5)
+
+    slot_ids = jnp.arange(cache_len)[None, :]     # (1, S)
+    if window is not None:
+        # ring buffer: valid entries are the last min(pos+1, window) writes
+        age = (slot_b[:, None] - slot_ids) % cache_len   # 0 = newest
+        valid = age < jnp.minimum(pos_b + 1, cache_len)[:, None]
+    else:
+        valid = slot_ids <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x_t.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v).reshape(b, 1, cfg.n_heads * hd)
+    return out @ params["wo"], {"k": k, "v": v}

@@ -1,0 +1,175 @@
+"""Mamba-2 SSD (state-space duality) layer - arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks; within a chunk the output is a masked quadratic form (the 'attention
+mode' of the duality), across chunks a compact (H, P, N) state is passed
+recurrently (the 'SSM mode').  Decode carries the state one token at a time.
+
+Per-head scalar A (the Mamba-2 simplification), G=1 B/C group, depthwise
+conv on the (x, B, C) projections, gated RMSNorm output - faithful to the
+reference architecture at the block level.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Dict:
+    d_inner, h, p, n = _dims(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * n   # conv over (x, B, C)
+    return {
+        # in_proj emits (z, x, B, C, dt)
+        "in_proj": init_dense(keys[0], d, 2 * d_inner + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(keys[1], (cfg.conv_kernel, conv_dim),
+                                     dtype=jnp.float32) / math.sqrt(cfg.conv_kernel)
+                   ).astype(dtype),
+        "a_log": jnp.zeros((h,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "d_skip": jnp.ones((h,), dtype=jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype=jnp.float32),
+        "out_proj": init_dense(keys[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(params, x, cfg):
+    d_inner, h, p, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xs, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xs, bc, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d.  u: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def ssm_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                return_cache: bool = False):
+    """Chunked SSD, full sequence.  x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    z, xs, bc, dt = _split_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(b, s, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                     # (H,)
+    la = dt * a[None, None, :]             # log decay per step, <= 0
+    xbar = xh * dt[..., None].astype(xh.dtype)
+
+    ch = cfg.ssm_chunk
+    ch = min(ch, s)
+    assert s % ch == 0
+    nc = s // ch
+    # reshape into chunks
+    xbar = xbar.reshape(b, nc, ch, h, p)
+    bmat_c = bmat.reshape(b, nc, ch, n)
+    cmat_c = cmat.reshape(b, nc, ch, n)
+    la_c = la.reshape(b, nc, ch, h)
+    cum = jnp.cumsum(la_c, axis=2)                 # (B, NC, ch, H)
+    total = cum[:, :, -1, :]                       # (B, NC, H)
+
+    # ---- intra-chunk (quadratic/'attention' mode) ----
+    # L[i, j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,i,j,H)
+    mask = jnp.tril(jnp.ones((ch, ch), dtype=bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cmat_c, bmat_c)     # (B,NC,i,j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         cb.astype(jnp.float32), decay,
+                         xbar.astype(jnp.float32))
+
+    # ---- inter-chunk states ----
+    # state_c = sum_j exp(total - cum_j) * B_j^T xbar_j
+    w_in = jnp.exp(total[:, :, None, :] - cum)             # (B,NC,ch,H)
+    state_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bmat_c.astype(jnp.float32),
+                         w_in, xbar.astype(jnp.float32))   # per-chunk update
+
+    def scan_states(prev, inp):
+        upd, tot = inp                                     # (B,H,P,N), (B,H)
+        new = prev * jnp.exp(tot)[:, :, None, None] + upd
+        return new, prev                                   # emit incoming state
+
+    upd_seq = jnp.moveaxis(state_c, 1, 0)                  # (NC,B,H,P,N)
+    tot_seq = jnp.moveaxis(total, 1, 0)                    # (NC,B,H)
+    init = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    final_state, in_states = jax.lax.scan(scan_states, init, (upd_seq, tot_seq))
+    in_states = jnp.moveaxis(in_states, 0, 1)              # (B,NC,H,P,N)
+
+    # ---- inter-chunk contribution: C_i exp(cum_i) state_in ----
+    w_out = jnp.exp(cum)                                   # (B,NC,ch,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         cmat_c.astype(jnp.float32), w_out, in_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm then out projection
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_cache:
+        return out
+    k = cfg.conv_kernel
+    cache = {"state": final_state, "conv": conv_in[:, -(k - 1):, :]}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode path: recurrent state + conv ring buffer
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, p, n), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype=dtype),
+    }
+
+
+def ssm_decode(params: Dict, x_t: jnp.ndarray, cache: Dict,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One token.  x_t: (B, 1, d)."""
+    b = x_t.shape[0]
+    d_inner, h, p, n = _dims(cfg)
+    z, xs, bc, dt = _split_proj(params, x_t, cfg)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)           # (B,1,conv_dim)
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,conv)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu(jnp.sum(hist * w[None], axis=1, keepdims=True))
+    new_conv = hist[:, 1:, :]
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(b, h, p)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt_t * a[None, :])                     # (B,H)
+    xbar = xh.astype(jnp.float32) * dt_t[..., None]
+    upd = jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), xbar)
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), state)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    return y @ params["out_proj"], {"state": state, "conv": new_conv}

@@ -1,0 +1,378 @@
+"""Decoder-only transformer assembly covering all assigned families.
+
+Layer stack = repeated `layer_pattern` of blocks (attn | rec | ssm), each
+optionally followed by a dense or MoE FFN.  Homogeneous repeats are stacked
+and scanned (`lax.scan` over stacked params) so the HLO stays compact at 48
+layers x 400B params; pattern remainders are unrolled.
+
+Inputs are either token ids (LMs) or precomputed frontend embeddings
+([vlm]/[audio] stubs per the brief).  Decode threads a per-layer cache
+pytree (KV ring buffers, SSM states, RG-LRU states).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import rms_norm, swiglu_ffn, swiglu_ffn_init, softcap
+from repro.sharding import shard
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, is_moe: bool) -> Dict:
+    dtype = _dtype(cfg.param_dtype)
+    k_mix, k_ffn = jax.random.split(key)
+    params: Dict[str, Any] = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+    }
+    if kind == "attn":
+        params["mix"] = attn_mod.init_attention(k_mix, cfg, dtype)
+    elif kind == "rec":
+        params["mix"] = rglru_mod.init_rglru(k_mix, cfg, dtype)
+    elif kind == "ssm":
+        params["mix"] = ssm_mod.init_ssm(k_mix, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        params["ln2"] = jnp.zeros((cfg.d_model,), dtype=jnp.float32)
+        if is_moe:
+            params["ffn"] = moe_mod.init_moe(k_ffn, cfg, dtype)
+        else:
+            params["ffn"] = swiglu_ffn_init(k_ffn, cfg.d_model, cfg.d_ff, dtype)
+    return params
+
+
+def block_forward(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                  cfg: ModelConfig, kind: str, is_moe: bool,
+                  window: Optional[int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block.  Returns (x, aux_loss)."""
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mixed = attn_mod.attention(params["mix"], h, positions, cfg,
+                                   window=window)
+    elif kind == "rec":
+        mixed = rglru_mod.rglru_forward(params["mix"], h, cfg)
+    else:
+        mixed = ssm_mod.ssm_forward(params["mix"], h, cfg)
+    x = shard(x + mixed, "act_btd")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        if is_moe:
+            out, aux = moe_mod.moe_ffn(params["ffn"], h, cfg)
+        else:
+            out = swiglu_ffn(params["ffn"], h)
+        x = shard(x + out, "act_btd")
+    return x, aux
+
+
+def init_block_cache(batch: int, cache_len: int, cfg: ModelConfig,
+                     kind: str, dtype=jnp.bfloat16) -> Dict:
+    if kind == "attn":
+        return attn_mod.init_kv_cache(batch, cache_len, cfg, dtype)
+    if kind == "rec":
+        return rglru_mod.init_rglru_cache(batch, cfg, dtype)
+    return ssm_mod.init_ssm_cache(batch, cfg, dtype)
+
+
+def block_decode(params: Dict, x_t: jnp.ndarray, cache: Dict,
+                 pos: jnp.ndarray, cfg: ModelConfig, kind: str, is_moe: bool,
+                 window: Optional[int]) -> Tuple[jnp.ndarray, Dict]:
+    h = rms_norm(x_t, params["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mixed, cache = attn_mod.attention_decode(params["mix"], h, cache, pos,
+                                                 cfg, window=window)
+    elif kind == "rec":
+        mixed, cache = rglru_mod.rglru_decode(params["mix"], h, cache, cfg)
+    else:
+        mixed, cache = ssm_mod.ssm_decode(params["mix"], h, cache, cfg)
+    x_t = x_t + mixed
+    if cfg.d_ff > 0:
+        h = rms_norm(x_t, params["ln2"], cfg.norm_eps)
+        if is_moe:
+            out, _ = moe_mod.moe_ffn(params["ffn"], h, cfg)
+        else:
+            out = swiglu_ffn(params["ffn"], h)
+        x_t = x_t + out
+    return x_t, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack layout: scanned super-layers + unrolled remainder
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig) -> Tuple[Tuple[str, bool], ...]:
+    """The repeating unit as ((kind, is_moe), ...)."""
+    if cfg.layer_pattern:
+        kinds = cfg.layer_pattern
+    elif cfg.family == "ssm":
+        kinds = ("ssm",)
+    else:
+        kinds = ("attn",)
+    period = max(len(kinds), cfg.moe_every if cfg.n_experts else 1)
+    # extend kinds cyclically to the common period
+    unit = []
+    for i in range(period):
+        unit.append((kinds[i % len(kinds)], cfg.is_moe_layer(i)))
+    return tuple(unit)
+
+
+def stack_layout(cfg: ModelConfig) -> Tuple[Tuple[Tuple[str, bool], ...], int, int]:
+    """(pattern unit, n_scanned_repeats, n_remainder_layers)."""
+    unit = _pattern(cfg)
+    p = len(unit)
+    return unit, cfg.n_layers // p, cfg.n_layers % p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = _dtype(cfg.param_dtype)
+    unit, n_rep, n_rem = stack_layout(cfg)
+    k_embed, k_head, k_layers, k_rem = jax.random.split(key, 4)
+    v = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (v, cfg.d_model),
+                                    dtype=jnp.float32) * 0.02).astype(dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            k_head, (cfg.d_model, v), dtype=jnp.float32)
+            * (cfg.d_model ** -0.5)).astype(dtype)
+
+    def init_super(k):
+        ks = jax.random.split(k, len(unit))
+        return {f"b{i}": init_block(ks[i], cfg, kind, is_moe)
+                for i, (kind, is_moe) in enumerate(unit)}
+
+    if n_rep > 0:
+        params["blocks"] = jax.vmap(init_super)(jax.random.split(k_layers, n_rep))
+    for r in range(n_rem):
+        kind, is_moe = unit[r]
+        params[f"rem{r}"] = init_block(
+            jax.random.fold_in(k_rem, r), cfg, kind, is_moe)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "none": None,
+    "dots": "dots",
+    "full": "full",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)   # "full": save nothing
+
+
+def forward(params: Dict, cfg: ModelConfig, *,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            window_override: Optional[int] = None,
+            remat: str = "none"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, Vpad), aux_loss scalar)."""
+    dtype = _dtype(cfg.compute_dtype)
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    else:
+        x = embeds.astype(dtype)
+    b, s, _ = x.shape
+    x = shard(x, "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    unit, n_rep, n_rem = stack_layout(cfg)
+    window = window_override if window_override is not None else (
+        cfg.local_window if "rec" in [u[0] for u in unit] else None)
+
+    def super_fwd(carry, layer_params):
+        x, aux = carry
+        for i, (kind, is_moe) in enumerate(unit):
+            w = window if kind == "attn" else None
+            x, a = block_forward(layer_params[f"b{i}"], x, positions, cfg,
+                                 kind, is_moe, w)
+            aux = aux + a
+        return (x, aux), None
+
+    aux = jnp.zeros((), jnp.float32)
+    if n_rep > 0:
+        body = _maybe_remat(super_fwd, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    for r in range(n_rem):
+        kind, is_moe = unit[r]
+        w = window if kind == "attn" else None
+        x, a = block_forward(params[f"rem{r}"], x, positions, cfg, kind,
+                             is_moe, w)
+        aux = aux + a
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = shard(x @ head, "act_btv")
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, aux
+
+
+def block_prefill(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                  cfg: ModelConfig, kind: str, is_moe: bool,
+                  window: Optional[int], cache_len: int,
+                  cache_dtype) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        clen = min(cache_len, window) if window is not None else cache_len
+        mixed, cache = attn_mod.attention_prefill(
+            params["mix"], h, positions, cfg, clen, window=window,
+            cache_dtype=cache_dtype)
+    elif kind == "rec":
+        mixed, cache = rglru_mod.rglru_forward(params["mix"], h, cfg,
+                                               return_cache=True)
+    else:
+        mixed, cache = ssm_mod.ssm_forward(params["mix"], h, cfg,
+                                           return_cache=True)
+    x = shard(x + mixed, "act_btd")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        if is_moe:
+            out, aux = moe_mod.moe_ffn(params["ffn"], h, cfg)
+        else:
+            out = swiglu_ffn(params["ffn"], h)
+        x = shard(x + out, "act_btd")
+    return x, cache, aux
+
+
+def prefill(params: Dict, cfg: ModelConfig, *,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    """Full forward emitting (last-position logits, decode-ready cache)."""
+    dtype = _dtype(cfg.compute_dtype)
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    else:
+        x = embeds.astype(dtype)
+    b, s, _ = x.shape
+    if cache_len is None:
+        cache_len = s
+    x = shard(x, "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    unit, n_rep, n_rem = stack_layout(cfg)
+    window = cfg.local_window if "rec" in [u[0] for u in unit] else None
+
+    def super_pre(x, layer_params):
+        caches = {}
+        for i, (kind, is_moe) in enumerate(unit):
+            w = window if kind == "attn" else None
+            x, c, _ = block_prefill(layer_params[f"b{i}"], x, positions, cfg,
+                                    kind, is_moe, w, cache_len, cache_dtype)
+            caches[f"b{i}"] = c
+        return x, caches
+
+    cache: Dict[str, Any] = {}
+    if n_rep > 0:
+        x, cache["blocks"] = jax.lax.scan(super_pre, x, params["blocks"])
+    for r in range(n_rem):
+        kind, is_moe = unit[r]
+        w = window if kind == "attn" else None
+        x, c, _ = block_prefill(params[f"rem{r}"], x, positions, cfg, kind,
+                                is_moe, w, cache_len, cache_dtype)
+        cache[f"rem{r}"] = c
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = softcap(x[:, -1:] @ head, cfg.logit_softcap)
+    return logits[:, 0, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, cache_len: int, cfg: ModelConfig,
+               dtype=jnp.bfloat16) -> Dict:
+    unit, n_rep, n_rem = stack_layout(cfg)
+
+    def one_super():
+        out = {}
+        for i, (kind, _) in enumerate(unit):
+            clen = min(cache_len, cfg.local_window) if (
+                kind == "attn" and "rec" in [u[0] for u in unit]) else cache_len
+            out[f"b{i}"] = init_block_cache(batch, clen, cfg, kind, dtype)
+        return out
+
+    cache: Dict[str, Any] = {}
+    if n_rep > 0:
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape),
+            one_super())
+    for r in range(n_rem):
+        kind, _ = unit[r]
+        clen = min(cache_len, cfg.local_window) if (
+            kind == "attn" and "rec" in [u[0] for u in unit]) else cache_len
+        cache[f"rem{r}"] = init_block_cache(batch, clen, cfg, kind, dtype)
+    return cache
+
+
+def decode_step(params: Dict, cache: Dict, tokens_t: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig, *,
+                embeds_t: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One token for the whole batch.  tokens_t: (B,) int32; pos scalar."""
+    dtype = _dtype(cfg.compute_dtype)
+    if embeds_t is None:
+        x = jnp.take(params["embed"], tokens_t[:, None], axis=0).astype(dtype)
+    else:
+        x = embeds_t.astype(dtype)
+    x = shard(x, "act_btd")
+    unit, n_rep, n_rem = stack_layout(cfg)
+    window = cfg.local_window if "rec" in [u[0] for u in unit] else None
+
+    def super_step(x, inp):
+        layer_params, layer_cache = inp
+        new_cache = {}
+        for i, (kind, is_moe) in enumerate(unit):
+            w = window if kind == "attn" else None
+            x, c = block_decode(layer_params[f"b{i}"], x,
+                                layer_cache[f"b{i}"], pos, cfg, kind,
+                                is_moe, w)
+            new_cache[f"b{i}"] = c
+        return x, new_cache
+
+    new_cache: Dict[str, Any] = {}
+    if n_rep > 0:
+        x, new_cache["blocks"] = jax.lax.scan(
+            super_step, x, (params["blocks"], cache["blocks"]))
+    for r in range(n_rem):
+        kind, is_moe = unit[r]
+        w = window if kind == "attn" else None
+        x, c = block_decode(params[f"rem{r}"], x, cache[f"rem{r}"], pos, cfg,
+                            kind, is_moe, w)
+        new_cache[f"rem{r}"] = c
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = softcap(x @ head, cfg.logit_softcap)
+    return logits[:, 0, :], new_cache

@@ -1,0 +1,135 @@
+"""BlockAMC-preconditioned optimizer: the paper's solver inside training.
+
+The paper positions AMC as a linear-system accelerator; its natural home in
+an LM training stack is the second-order preconditioner (cf. RePAST, the
+paper's ref [30]: a ReRAM in-memory accelerator for second-order training).
+We maintain a Kronecker-factored Gram matrix G = E[g g^T] over each 2-D
+parameter's output dimension and precondition Shampoo-style with the
+inverse root
+
+    p = g (G + lambda I)^-1/2
+
+computed by the Denman-Beavers iteration
+
+    Y_0 = A, Z_0 = I;  Y_{k+1} = (Y_k + Z_k^-1)/2, Z_{k+1} = (Z_k + Y_k^-1)/2
+    Y_k -> A^1/2, Z_k -> A^-1/2
+
+whose core primitive is *matrix inversion* - each step's two inverses run
+through `distributed.block_inv`, the digital BlockAMC recursion (GEMM-only,
+mesh-shardable, exactly Algorithm 1's divide-and-conquer identity).
+Optionally those inverses can be routed through the *analog* simulator
+(`use_analog=True`), modelling an AMC accelerator attached to the optimizer
+with the paper's non-idealities + digital refinement (core/hybrid.py).
+
+This is a lightweight Shampoo-class method: refreshed inverses every
+`update_every` steps, preconditioning only dims <= max_dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockamc, hybrid
+from repro.core.analog import AnalogConfig
+from repro.core.distributed import block_inv
+
+
+class PrecondState(NamedTuple):
+    gram: Any        # per-leaf (d, d) or None placeholder
+    inv: Any         # cached inverse factors
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAMCPrecond:
+    beta: float = 0.95
+    damping: float = 1e-3
+    update_every: int = 20
+    leaf_size: int = 64         # BlockAMC array size for the recursion
+    max_dim: int = 2048         # precondition only if output dim <= this
+    use_analog: bool = False    # route solves through the analog simulator
+    analog_cfg: AnalogConfig = AnalogConfig(array_size=64)
+    refine_iters: int = 4       # digital refinement after an analog seed
+    db_iters: int = 14          # Denman-Beavers iterations for the inv-root
+
+    def _eligible(self, p) -> bool:
+        return p.ndim == 2 and p.shape[1] <= self.max_dim
+
+    def init(self, params) -> PrecondState:
+        def gram(p):
+            if not self._eligible(p):
+                return jnp.zeros((0,))
+            d = p.shape[1]
+            return jnp.eye(d, dtype=jnp.float32) * self.damping
+
+        def inv(p):
+            if not self._eligible(p):
+                return jnp.zeros((0,))
+            d = p.shape[1]
+            return jnp.eye(d, dtype=jnp.float32) / self.damping
+
+        return PrecondState(gram=jax.tree.map(gram, params),
+                            inv=jax.tree.map(inv, params),
+                            step=jnp.zeros((), jnp.int32))
+
+    def update_stats(self, grads, state: PrecondState) -> PrecondState:
+        def one(g, gr):
+            if gr.size == 0:
+                return gr
+            g32 = g.astype(jnp.float32)
+            new = (g32.T @ g32) / g.shape[0]
+            return self.beta * gr + (1 - self.beta) * new
+
+        gram = jax.tree.map(one, grads, state.gram)
+        return state._replace(gram=gram, step=state.step + 1)
+
+    def _inv(self, a: jnp.ndarray, key) -> jnp.ndarray:
+        """One matrix inverse - the BlockAMC primitive (digital or analog)."""
+        if not self.use_analog:
+            return block_inv(a, self.leaf_size)
+        # analog path: column-by-column BlockAMC solve + digital refinement
+        plan = blockamc.build_plan(a, key, self.analog_cfg)
+
+        def solve_col(b):
+            x0 = blockamc.execute(plan, b, self.analog_cfg)
+            return hybrid.cg_refine(a, b, x0, self.refine_iters)
+
+        return jax.vmap(solve_col, in_axes=1, out_axes=1)(
+            jnp.eye(a.shape[0], dtype=jnp.float32))
+
+    def _invert(self, gram: jnp.ndarray, key) -> jnp.ndarray:
+        """(G + lambda I)^-1/2 via Denman-Beavers (inverse-only iteration)."""
+        d = gram.shape[0]
+        a = gram + self.damping * jnp.eye(d, dtype=jnp.float32)
+        # scale to unit spectral-ish norm for DB convergence
+        c = jnp.trace(a) / d
+        y = a / c
+        z = jnp.eye(d, dtype=jnp.float32)
+        for i in range(self.db_iters):
+            ki = jax.random.fold_in(key, i)
+            y_inv = self._inv(y, ki)
+            z_inv = self._inv(z, jax.random.fold_in(ki, 1))
+            y, z = 0.5 * (y + z_inv), 0.5 * (z + y_inv)
+        return z / jnp.sqrt(c)       # -> (A/c)^-1/2 / sqrt(c) = A^-1/2
+
+    def refresh_inverses(self, state: PrecondState,
+                         key=None) -> PrecondState:
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        def one(gr, old_inv):
+            if gr.size == 0:
+                return old_inv
+            return self._invert(gr, key)
+
+        return state._replace(inv=jax.tree.map(one, state.gram, state.inv))
+
+    def precondition(self, grads, state: PrecondState):
+        def one(g, inv):
+            if inv.size == 0:
+                return g
+            return (g.astype(jnp.float32) @ inv).astype(g.dtype)
+
+        return jax.tree.map(one, grads, state.inv)

@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import StepWatchdog, retry_step  # noqa: F401
+from repro.runtime.elastic import ElasticMesh  # noqa: F401

@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh at a new size and reshard from ckpt.
+
+Elasticity here is restart-path (the production-standard approach for TPU
+pods): on a capacity change the job checkpoints (or uses the last one),
+re-launches with a new mesh, and `restore_checkpoint` device_puts every
+leaf with the *new* sharding.  ElasticMesh picks the best (data, model)
+factorisation for the surviving device count given the model's divisibility
+constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    """Chooses mesh shapes as device counts change."""
+    model_axis_candidates: Tuple[int, ...] = (16, 8, 4, 2, 1)
+    min_model_axis: int = 1
+
+    def choose_shape(self, n_devices: int,
+                     model_divisors: Tuple[int, ...] = ()) -> Tuple[int, int]:
+        """(data, model) with model as large as divisibility allows."""
+        for m in self.model_axis_candidates:
+            if m < self.min_model_axis or n_devices % m:
+                continue
+            if model_divisors and any(d % m for d in model_divisors):
+                continue
+            return (n_devices // m, m)
+        return (n_devices, 1)
+
+    def make_mesh(self, devices: Optional[List] = None,
+                  model_divisors: Tuple[int, ...] = ()) -> Mesh:
+        devices = devices if devices is not None else jax.devices()
+        data, model = self.choose_shape(len(devices), model_divisors)
+        import numpy as np
+        arr = np.asarray(devices[:data * model]).reshape(data, model)
+        return Mesh(arr, ("data", "model"))

@@ -1,0 +1,50 @@
+"""Batched generation engine: prefill once, decode in a jitted scan loop.
+
+A deliberately small but production-shaped engine: static batch slots,
+greedy or temperature sampling, per-request stop handling, cache reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: ModelConfig
+    params: Dict
+    max_len: int = 512
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.max_len))
+        self._decode = jax.jit(make_decode_step(self.cfg, self.temperature))
+
+    def generate(self, tokens: jnp.ndarray, n_steps: int,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """tokens: (B, S_prompt) -> (B, n_steps) generated ids."""
+        b, s = tokens.shape
+        assert s + n_steps <= self.max_len
+        key = key if key is not None else jax.random.PRNGKey(0)
+        next_tok, cache = self._prefill(self.params, {"tokens": tokens})
+
+        def body(carry, k):
+            tok, cache, pos, done = carry
+            new_tok, cache = self._decode(self.params, cache, tok, pos, k)
+            if self.eos_id is not None:
+                done = jnp.logical_or(done, new_tok == self.eos_id)
+                new_tok = jnp.where(done, self.eos_id, new_tok)
+            return (new_tok, cache, pos + 1, done), tok
+
+        keys = jax.random.split(key, n_steps)
+        init = (next_tok, cache, jnp.int32(s), jnp.zeros((b,), bool))
+        _, out = jax.lax.scan(body, init, keys)
+        return jnp.moveaxis(out, 0, 1)              # (B, n_steps)

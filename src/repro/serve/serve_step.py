@@ -1,0 +1,44 @@
+"""Serving steps: jit-able prefill and decode, the dry-run lowering targets.
+
+decode_* shapes lower `serve_step` (one new token against a cache of
+seq_len), prefill_* shapes lower the full prompt forward - per the brief.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    """prefill(params, tokens|embeds) -> (next_token, cache)."""
+
+    def prefill_step(params, batch: Dict):
+        logits, cache = tr.prefill(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), cache_len=cache_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, temperature: float = 0.0):
+    """decode(params, cache, token, pos, key) -> (token, cache)."""
+
+    def decode_step(params, cache, tokens_t, pos, key):
+        logits, cache = tr.decode_step(params, cache, tokens_t, pos, cfg)
+        if temperature > 0.0:
+            logits = logits / temperature
+            nxt = jax.random.categorical(key, logits.astype(jnp.float32),
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return decode_step

@@ -1,0 +1,2 @@
+from repro.sharding.api import (  # noqa: F401
+    ShardingPolicy, set_policy, current_policy, shard, clear_policy)

@@ -1,0 +1,68 @@
+"""Activation-sharding policy: a scoped registry of named PartitionSpecs.
+
+Model code annotates tensors by *logical* name (`shard(x, "act_btd")`); the
+launcher installs a policy binding those names to PartitionSpecs on the
+active mesh.  With no policy installed every call is a no-op, so unit tests
+and single-host runs never touch device APIs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    rules: Dict[str, PartitionSpec]
+    meta: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+_ACTIVE: Optional[ShardingPolicy] = None
+
+
+def set_policy(policy: Optional[ShardingPolicy]) -> None:
+    global _ACTIVE
+    _ACTIVE = policy
+
+
+def clear_policy() -> None:
+    set_policy(None)
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def policy_scope(policy: ShardingPolicy):
+    prev = current_policy()
+    set_policy(policy)
+    try:
+        yield
+    finally:
+        set_policy(prev)
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    """Constrain x to the active policy's spec for `name` (no-op if unbound)."""
+    pol = _ACTIVE
+    if pol is None:
+        return x
+    spec = pol.rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))
+
+
+def get_meta(name: str, default: int = 1) -> int:
+    """Trace-time integer hints from the active policy (e.g. dp_groups)."""
+    pol = _ACTIVE
+    if pol is None:
+        return default
+    return pol.meta.get(name, default)

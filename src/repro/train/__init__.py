@@ -1,0 +1,2 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainState, init_train_state, make_train_step, loss_fn)

@@ -1,0 +1,127 @@
+"""Training step: loss, grads, microbatch accumulation, optimizer update.
+
+The step is a pure function suitable for pjit on the production mesh:
+activations carry `shard()` constraints from the model, parameters carry
+NamedShardings assigned by sharding/partition.py, and XLA inserts the
+gradient all-reduces.  Microbatching (gradient accumulation) runs as a
+lax.scan over batch slices so arbitrarily large global batches fit HBM;
+XLA's latency-hiding scheduler overlaps microbatch k+1's compute with
+microbatch k's reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tr
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import warmup_cosine
+
+AUX_WEIGHT = 0.01   # MoE load-balance loss weight
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(key, model_cfg: ModelConfig, run_cfg: RunConfig,
+                     opt: Optional[AdamW] = None) -> Tuple[TrainState, AdamW]:
+    if opt is None:
+        opt = AdamW(lr=run_cfg.learning_rate,
+                    moments_dtype={"float32": jnp.float32,
+                                   "bfloat16": jnp.bfloat16}[run_cfg.moments_dtype])
+    params = tr.init_params(key, model_cfg)
+    return TrainState(params=params, opt=opt.init(params)), opt
+
+
+def loss_fn(params, batch: Dict, model_cfg: ModelConfig,
+            remat: str = "none") -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = tr.forward(
+        params, model_cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        remat=remat)
+    labels = batch["labels"]                        # (B, S) int32, -1 = pad
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # select label logits via a fused one-hot reduce rather than
+    # take_along_axis: the gather would force an all-gather of the
+    # vocab-sharded logits; the masked reduce stays sharded + psums a scalar.
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    onehot = vocab_ids == jnp.maximum(labels, 0)[..., None]
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum((lse - ll) * mask) / denom
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(model_cfg: ModelConfig, run_cfg: RunConfig, opt: AdamW,
+                    grad_shardings=None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    grad_shardings: optional pytree of NamedShardings matching params.
+    Constraining per-microbatch gradients to the parameter sharding turns
+    the batch-axis reduction into a reduce-scatter fused with accumulation
+    (ZeRO-style) instead of an all-reduce of replicated full gradients -
+    measured ~50x collective-bytes reduction on the MoE cells (S-Perf).
+    """
+    n_micro = 1
+    if run_cfg.microbatch is not None:
+        assert run_cfg.global_batch % run_cfg.microbatch == 0
+        n_micro = run_cfg.global_batch // run_cfg.microbatch
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, model_cfg, run_cfg.remat), has_aux=True)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = constrain(grads)
+        else:
+            acc_dt = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[run_cfg.accum_dtype]
+
+            def slice_micro(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(slice_micro, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                g = constrain(g)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + (x / n_micro).astype(acc_dt), g_acc, g)
+                g_acc = constrain(g_acc)
+                return (g_acc, l_acc + l / n_micro), None
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params))
+            (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), micro)
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        lr_scale = warmup_cosine(state.opt.step)
+        new_params, new_opt = opt.update(grads, state.opt, state.params,
+                                         lr_scale=lr_scale)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr_scale=lr_scale)
+        return TrainState(new_params, new_opt), metrics
+
+    return step

@@ -1,0 +1,75 @@
+"""Training loop: data -> step -> metrics, with checkpoint/restart, watchdog,
+and optional BlockAMC-preconditioned second-order updates.
+
+This is the single-process driver; launch/train.py wraps it with mesh setup
+and sharded state placement for pod runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint)
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.optim.adamw import AdamW
+from repro.runtime.fault_tolerance import StepWatchdog, retry_step
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class Trainer:
+    model_cfg: ModelConfig
+    run_cfg: RunConfig
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    seed: int = 0
+    log_every: int = 10
+    on_metrics: Optional[Callable[[int, Dict], None]] = None
+
+    def __post_init__(self):
+        self.state, self.opt = init_train_state(
+            jax.random.PRNGKey(self.seed), self.model_cfg, self.run_cfg)
+        self.step_fn = jax.jit(make_train_step(
+            self.model_cfg, self.run_cfg, self.opt), donate_argnums=(0,))
+        self.data = SyntheticLM(self.model_cfg, self.run_cfg, seed=self.seed)
+        self.start_step = 0
+        self.ckpt_mgr = None
+        if self.ckpt_dir is not None:
+            self.ckpt_mgr = CheckpointManager(self.ckpt_dir, self.ckpt_every)
+            last = latest_step(self.ckpt_dir)
+            if last is not None:
+                log.info("resuming from checkpoint step %d", last)
+                self.state = restore_checkpoint(self.ckpt_dir, last, self.state)
+                self.start_step = last
+
+    def run(self, n_steps: int) -> Dict[str, list]:
+        history: Dict[str, list] = {"loss": [], "step": [], "dt": []}
+        watchdog = StepWatchdog()
+        for step in range(self.start_step, self.start_step + n_steps):
+            batch = self.data.batch(step)
+            t0 = time.monotonic()
+            with watchdog:
+                self.state, metrics = retry_step(
+                    lambda: self.step_fn(self.state, batch))
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            history["loss"].append(loss)
+            history["step"].append(step)
+            history["dt"].append(dt)
+            if self.on_metrics:
+                self.on_metrics(step, metrics)
+            if step % self.log_every == 0:
+                log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+            if self.ckpt_mgr is not None:
+                self.ckpt_mgr.maybe_save(step + 1, self.state)
+        if self.ckpt_mgr is not None:
+            self.ckpt_mgr.wait()
+        return history

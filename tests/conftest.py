@@ -1,0 +1,34 @@
+"""Shared test fixtures: reduced per-family model configs."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+
+
+def reduce_cfg(cfg, **overrides):
+    """Shrink any arch config to smoke-test size, keeping its topology."""
+    kw = dict(
+        n_layers=4 if not cfg.layer_pattern else 2 * len(cfg.layer_pattern),
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=512,
+        n_heads=4 if cfg.n_heads else 0,
+        kv_heads=min(cfg.kv_heads, 2) if cfg.kv_heads else 0,
+        head_dim=16,
+        lru_width=64 if cfg.lru_width else None,
+        n_experts=4 if cfg.n_experts else 0,
+        local_window=8,
+        ssm_state=16,
+        ssm_head_dim=8,
+        ssm_chunk=4,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+@pytest.fixture
+def tiny_dense():
+    return reduce_cfg(get_config("glm4-9b"))

@@ -1,0 +1,117 @@
+"""AMC circuit primitive tests: signs, mapping, quantisation, tiling, gain."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analog
+from repro.core.analog import AnalogConfig, map_matrix, map_tiled
+from repro.data.matrices import wishart, random_rhs
+
+KEY = jax.random.PRNGKey(0)
+KA, KB, KN = jax.random.split(KEY, 3)
+CFG = AnalogConfig(array_size=16)
+
+
+def test_mvm_sign_and_value():
+    a = wishart(KA, 16)
+    v = random_rhs(KB, 16)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    pair = map_matrix(a, KN, CFG, scale)
+    out = analog.amc_mvm(pair, v, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(-(a * scale) @ v),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_inv_sign_and_value():
+    a = wishart(KA, 16)
+    v = random_rhs(KB, 16)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    pair = map_matrix(a, KN, CFG, scale)
+    out = analog.amc_inv(pair, v, CFG)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(-jnp.linalg.solve(a * scale, v)),
+        rtol=1e-3, atol=1e-5)
+
+
+def test_differential_split_nonnegative():
+    """A = A+ - A- with both arrays' conductances physical (>= 0)."""
+    a = wishart(KA, 16) - 0.2   # force signed entries
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    pair = map_matrix(a, KN, CFG, scale)
+    assert bool(jnp.all(pair.gpos >= 0))
+    assert bool(jnp.all(pair.gneg >= 0))
+    # exactly one of the differential pair is nonzero per cell (ideal map)
+    assert bool(jnp.all((pair.gpos * pair.gneg) == 0.0))
+    np.testing.assert_allclose(np.asarray(pair.a_eff(CFG)),
+                               np.asarray(a * scale), rtol=1e-5, atol=1e-7)
+
+
+def test_tiled_mvm_equals_dense():
+    """Partitioned MVM over 4 tiles == single-array MVM (refs [13]-[15])."""
+    a = wishart(KA, 32)
+    v = random_rhs(KB, 32)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    grid = map_tiled(a, KN, CFG, scale)   # 2x2 grid of 16-tiles
+    assert len(grid) == 2 and len(grid[0]) == 2
+    out = analog.amc_mvm_tiled(grid, v, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(-(a * scale) @ v),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_tiled_mvm_ragged():
+    """Non-multiple sizes produce edge tiles of the remainder size."""
+    a = wishart(KA, 20)
+    v = random_rhs(KB, 20)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    grid = map_tiled(a, KN, CFG, scale)   # 16+4 per side
+    assert grid[0][0].shape == (16, 16)
+    assert grid[1][1].shape == (4, 4)
+    out = analog.amc_mvm_tiled(grid, v, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(-(a * scale) @ v),
+                               rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits,tol", [(4, 0.15), (8, 0.01), (12, 1e-3)])
+def test_quantization_error_scales_with_bits(bits, tol):
+    v = random_rhs(KB, 256)
+    vq = analog.quantize(v, bits, 1.0)
+    err = float(jnp.max(jnp.abs(v - vq)))
+    assert err <= 2.0 / (2 ** bits - 1)
+    assert err <= tol
+
+
+def test_quantization_ideal_passthrough():
+    v = random_rhs(KB, 64)
+    np.testing.assert_array_equal(np.asarray(analog.quantize(v, None, 1.0)),
+                                  np.asarray(v))
+
+
+def test_finite_gain_error_grows_with_array_size():
+    """Summing-node error scales with row conductance sum (paper Fig. 6c)."""
+    errs = []
+    for n in [16, 64, 256]:
+        a = wishart(KA, n)
+        v = random_rhs(KB, n)
+        scale = 1.0 / jnp.max(jnp.abs(a))
+        cfg = AnalogConfig(array_size=n, opa_gain=1e4)
+        pair = map_matrix(a, KN, cfg, scale)
+        out = analog.amc_inv(pair, v, cfg)
+        ref = -jnp.linalg.solve(a * scale, v)
+        errs.append(float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_finite_gain_converges_to_ideal():
+    a = wishart(KA, 32)
+    v = random_rhs(KB, 32)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    ref = -jnp.linalg.solve(a * scale, v)
+    prev = None
+    for gain in [1e3, 1e5, 1e7]:
+        cfg = AnalogConfig(array_size=32, opa_gain=gain)
+        pair = map_matrix(a, KN, cfg, scale)
+        err = float(jnp.linalg.norm(analog.amc_inv(pair, v, cfg) - ref))
+        if prev is not None:
+            assert err < prev
+        prev = err

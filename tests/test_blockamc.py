@@ -1,0 +1,179 @@
+"""BlockAMC algorithm tests: Algorithm 1 fidelity, signs, stages, edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blockamc, analog
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.core.metrics import relative_error
+from repro.data.matrices import wishart, toeplitz, random_rhs
+
+KEY = jax.random.PRNGKey(0)
+KA, KB, KN = jax.random.split(KEY, 3)
+
+
+def _solve_refs(n, family=wishart):
+    a = family(KA, n)
+    b = random_rhs(KB, n)
+    return a, b, jnp.linalg.solve(a, b)
+
+
+@pytest.mark.parametrize("stages", [0, 1, 2, 3, None])
+def test_ideal_exact(stages):
+    """With ideal devices the cascade equals the numerical solution."""
+    a, b, x_ref = _solve_refs(64)
+    cfg = AnalogConfig(array_size=8)
+    x = blockamc.solve(a, b, KN, cfg, stages=stages)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+@pytest.mark.parametrize("n", [7, 13, 65, 100])
+def test_odd_sizes(n):
+    """Paper: odd n partitions with A1 of size (n+1)/2."""
+    a, b, x_ref = _solve_refs(n)
+    cfg = AnalogConfig(array_size=max(4, n // 3))
+    x = blockamc.solve(a, b, KN, cfg, stages=None)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+def test_five_step_cascade_signs():
+    """Intermediate signals carry exactly the signs of Algorithm 1."""
+    n = 16
+    a, b, _ = _solve_refs(n)
+    cfg = AnalogConfig(array_size=8)
+    m = 8
+    a1, a2 = a[:m, :m], a[:m, m:]
+    a3, a4 = a[m:, :m], a[m:, m:]
+    f, g = b[:m], b[m:]
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    k1, k2, k3, k4 = jax.random.split(KN, 4)
+    p1 = analog.map_matrix(a1, k1, cfg, scale)
+    p3 = analog.map_matrix(a3, k3, cfg, scale)
+
+    neg_yt = analog.amc_inv(p1, f, cfg)            # step 1 output: -y_t
+    y_t_expected = jnp.linalg.solve(a1 * scale, f)
+    np.testing.assert_allclose(np.asarray(neg_yt), -np.asarray(y_t_expected),
+                               rtol=2e-3, atol=1e-5)
+
+    gt = analog.amc_mvm(p3, neg_yt, cfg)           # step 2 output: +g_t
+    gt_expected = (a3 * scale) @ y_t_expected
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gt_expected),
+                               rtol=2e-3, atol=1e-5)
+
+
+def test_zero_offdiag_block_reduces_schur():
+    """Paper: if A2 or A3 is zero, A4s == A4 (no pre-processing needed)."""
+    n = 32
+    a = wishart(KA, n)
+    a = a.at[:16, 16:].set(0.0)   # A2 = 0
+    b = random_rhs(KB, n)
+    x_ref = jnp.linalg.solve(a, b)
+    cfg = AnalogConfig(array_size=16)
+    plan = blockamc.build_plan(a, KN, cfg, stages=1)
+    # A4s should equal A4 (up to mapping scale) when A2 == 0.
+    a4s_eff = plan.root.inv4s.pair.a_eff(cfg) / plan.scale
+    np.testing.assert_allclose(np.asarray(a4s_eff), np.asarray(a[16:, 16:]),
+                               rtol=1e-4, atol=1e-6)
+    x = blockamc.execute(plan, b, cfg)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+def test_two_stage_structure():
+    """Two-stage on 256 gives leaf arrays of 64 (16 blocks; paper Fig. 8)."""
+    a = wishart(KA, 256)
+    cfg = AnalogConfig(array_size=64)
+    plan = blockamc.build_plan(a, KN, cfg, stages=2)
+    root = plan.root
+    assert isinstance(root, blockamc.BlockPlan)
+    assert isinstance(root.inv1, blockamc.BlockPlan)
+    assert isinstance(root.inv1.inv1, blockamc.LeafInvPlan)
+    assert root.inv1.inv1.pair.shape == (64, 64)
+    # A2/A3 at stage 1 are 128-wide -> 2x2 grids of 64-tiles
+    assert len(root.mvm2) == 2 and len(root.mvm2[0]) == 2
+    assert root.mvm2[0][0].shape == (64, 64)
+
+
+def test_required_stages():
+    assert blockamc.required_stages(512, 256) == 1
+    assert blockamc.required_stages(512, 64) == 3
+    assert blockamc.required_stages(256, 256) == 0
+    assert blockamc.required_stages(257, 256) == 1
+
+
+def test_variation_block_beats_original():
+    """Paper Fig. 7 headline: BlockAMC accuracy >= original AMC (medians)."""
+    n = 128
+    a, b, x_ref = _solve_refs(n)
+    cfg = AnalogConfig(array_size=64, nonideal=NonidealConfig(sigma=0.05))
+    errs_b, errs_o = [], []
+    for s in range(16):
+        kn = jax.random.PRNGKey(1000 + s)
+        errs_b.append(float(relative_error(
+            x_ref, blockamc.solve(a, b, kn, cfg, stages=1))))
+        errs_o.append(float(relative_error(
+            x_ref, blockamc.solve_original(a, b, kn, cfg))))
+    assert np.median(errs_b) <= np.median(errs_o) * 1.1
+
+
+def test_finite_opa_gain_block_beats_original():
+    """Paper Fig. 6(c): even with ideal mapping, smaller arrays win."""
+    n = 128
+    a, b, x_ref = _solve_refs(n)
+    cfg = AnalogConfig(array_size=64, opa_gain=1e4)
+    xb = blockamc.solve(a, b, KN, cfg, stages=1)
+    xo = blockamc.solve_original(a, b, KN, cfg)
+    assert float(relative_error(x_ref, xb)) < float(relative_error(x_ref, xo))
+
+
+def test_vmap_over_noise_keys():
+    """40-seed Monte Carlo via vmap (the paper's experiment shape)."""
+    n = 32
+    a, b, x_ref = _solve_refs(n)
+    cfg = AnalogConfig(array_size=16, nonideal=NonidealConfig(sigma=0.05))
+    keys = jax.random.split(KN, 8)
+    xs = jax.vmap(lambda k: blockamc.solve(a, b, k, cfg, stages=1))(keys)
+    assert xs.shape == (8, n)
+    errs = jax.vmap(lambda x: relative_error(x_ref, x))(xs)
+    assert bool(jnp.all(jnp.isfinite(errs)))
+    # different keys -> different noise -> different errors
+    assert float(jnp.std(errs)) > 0.0
+
+
+def test_jit_solve():
+    n = 32
+    a, b, x_ref = _solve_refs(n)
+    cfg = AnalogConfig(array_size=16)
+    f = jax.jit(lambda a, b, k: blockamc.solve(a, b, k, cfg, stages=1))
+    x = f(a, b, KN)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=4, max_value=48),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_property_ideal_solves_any_wellconditioned_system(n, seed):
+    """Property: ideal BlockAMC solves any diagonally-regularised system."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    raw = jax.random.normal(k1, (n, n)) / jnp.sqrt(n)
+    a = raw + 2.0 * jnp.eye(n)          # well-conditioned, signed entries
+    b = random_rhs(k2, n)
+    x_ref = jnp.linalg.solve(a, b)
+    cfg = AnalogConfig(array_size=max(2, n // 2))
+    x = blockamc.solve(a, b, k3, cfg, stages=None)
+    assert float(relative_error(x_ref, x)) < 5e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_property_toeplitz(seed):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(kk, 3)
+    a = toeplitz(k1, 24)
+    b = random_rhs(k2, 24)
+    x_ref = jnp.linalg.solve(a, b)
+    cfg = AnalogConfig(array_size=12)
+    x = blockamc.solve(a, b, k3, cfg, stages=1)
+    assert float(relative_error(x_ref, x)) < 1e-3

@@ -1,0 +1,101 @@
+"""Beyond-paper extensions: wire-drop compensation + bit-sliced mapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analog, nonideal
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+
+G0 = 100e-6
+
+
+# ----------------------- IR-drop compensation ------------------------------
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_compensation_recovers_target(n):
+    """effective_conductance(compensate(G)) ~= G (ref [29] mitigation)."""
+    a = jnp.abs(wishart(jax.random.PRNGKey(0), n))
+    g = a / jnp.max(a) * G0
+    g_prog = nonideal.compensate_conductances(g, 1.0)
+    g_eff = nonideal.effective_conductance(g_prog, 1.0)
+    uncomp_dev = float(jnp.linalg.norm(
+        nonideal.effective_conductance(g, 1.0) - g) / jnp.linalg.norm(g))
+    comp_dev = float(jnp.linalg.norm(g_eff - g) / jnp.linalg.norm(g))
+    assert comp_dev < 0.05 * uncomp_dev
+
+
+def test_compensation_against_exact_mna():
+    """Compensated programming cancels the wire error in the exact circuit."""
+    n = 16
+    a = jnp.abs(wishart(jax.random.PRNGKey(1), n))
+    g = a / jnp.max(a) * G0
+    v = jnp.abs(random_rhs(jax.random.PRNGKey(2), n)) + 0.1
+    i_ideal = np.asarray(g @ v)
+    i_raw = np.asarray(nonideal.mna_mvm_currents(g, v, 1.0))
+    g_prog = nonideal.compensate_conductances(g, 1.0)
+    i_comp = np.asarray(nonideal.mna_mvm_currents(g_prog, v, 1.0))
+    raw_err = np.linalg.norm(i_raw - i_ideal)
+    comp_err = np.linalg.norm(i_comp - i_ideal)
+    assert comp_err < 0.2 * raw_err
+
+
+def test_compensation_zero_r_identity():
+    g = jnp.ones((8, 8)) * G0 * 0.5
+    np.testing.assert_array_equal(
+        np.asarray(nonideal.compensate_conductances(g, 0.0)), np.asarray(g))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_compensation_physical(seed):
+    """Programmed conductances stay non-negative for any positive target."""
+    g = jax.random.uniform(jax.random.PRNGKey(seed), (12, 12), maxval=G0)
+    g_prog = nonideal.compensate_conductances(g, 1.5)
+    assert bool(jnp.all(g_prog >= 0.0))
+    assert bool(jnp.all(g_prog >= g - 1e-12))   # compensation only adds
+
+
+# ------------------------- bit-sliced mapping -------------------------------
+
+def test_sliced_mvm_exact_when_noiseless():
+    """2x4-bit slices reconstruct an 8-bit-grid matrix exactly."""
+    cfg = AnalogConfig(array_size=32)
+    a = jax.random.uniform(jax.random.PRNGKey(0), (32, 32),
+                           minval=-1.0, maxval=1.0)
+    # snap target to the representable k/256 grid (k <= 255)
+    a = jnp.floor(jnp.minimum(jnp.abs(a), 255 / 256) * 256) / 256 * jnp.sign(a)
+    v = random_rhs(jax.random.PRNGKey(1), 32)
+    scale = 1.0   # already <= 255/256
+    pairs = analog.map_matrix_sliced(a, jax.random.PRNGKey(2), cfg, scale,
+                                     n_slices=2, bits_per_slice=4)
+    out = analog.amc_mvm_sliced(pairs, v, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(-a @ v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sliced_mvm_extends_device_precision():
+    """The honest bit-slicing claim (ISAAC): with 4-bit-resolution devices,
+    two shift-added slices reach ~8-bit effective MVM precision, far beyond
+    one 4-bit array.  (Under purely *additive* conductance noise slicing
+    gives no SNR gain - the high slice re-enters at weight 1 - so the win
+    is quantisation, which n_slices=1 vs 2 at fixed bits_per_slice shows.)"""
+    cfg = AnalogConfig(array_size=64)   # noiseless: isolate quantisation
+    a = jax.random.uniform(jax.random.PRNGKey(3), (64, 64),
+                           minval=-1.0, maxval=1.0)
+    v = random_rhs(jax.random.PRNGKey(4), 64)
+    scale = (255 / 256) / jnp.max(jnp.abs(a))
+    ref = -(a * scale) @ v
+    key = jax.random.PRNGKey(100)
+    one = analog.amc_mvm_sliced(
+        analog.map_matrix_sliced(a, key, cfg, scale, n_slices=1,
+                                 bits_per_slice=4), v, cfg)
+    two = analog.amc_mvm_sliced(
+        analog.map_matrix_sliced(a, key, cfg, scale, n_slices=2,
+                                 bits_per_slice=4), v, cfg)
+    err1 = float(jnp.linalg.norm(one - ref))
+    err2 = float(jnp.linalg.norm(two - ref))
+    assert err2 < err1 / 8.0      # ~16x expected; allow margin

@@ -1,0 +1,140 @@
+"""Hybrid refinement + distributed solver + macro/area model tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import area_energy, blockamc, distributed, hybrid, macro
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.core.metrics import relative_error
+from repro.data.matrices import wishart, random_rhs
+
+KA, KB, KN = jax.random.split(jax.random.PRNGKey(0), 3)
+
+
+# ------------------------------- hybrid ----------------------------------
+
+def test_cg_refine_converges():
+    a = wishart(KA, 64)
+    b = random_rhs(KB, 64)
+    x_ref = jnp.linalg.solve(a, b)
+    x = hybrid.cg_refine(a, b, jnp.zeros_like(b), 80)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+def test_analog_seed_saves_iterations():
+    """The paper's positioning: AMC seed accelerates digital iteration."""
+    a = wishart(KA, 96)
+    b = random_rhs(KB, 96)
+    cfg = AnalogConfig(array_size=48, nonideal=NonidealConfig(sigma=0.05))
+    x_seed = blockamc.solve(a, b, KN, cfg, stages=1)
+    _, it_seed = hybrid.iterations_to_tol(a, b, x_seed, tol=1e-5)
+    _, it_zero = hybrid.iterations_to_tol(a, b, jnp.zeros_like(b), tol=1e-5)
+    assert int(it_seed) <= int(it_zero)
+
+
+def test_richardson_reduces_residual():
+    a = wishart(KA, 32)
+    b = random_rhs(KB, 32)
+    x0 = jnp.zeros_like(b)
+    x = hybrid.richardson_refine(a, b, x0, 200)
+    r0 = float(jnp.linalg.norm(b - a @ x0))
+    r1 = float(jnp.linalg.norm(b - a @ x))
+    assert r1 < 0.1 * r0
+
+
+def test_iterations_to_tol_fuel_bound():
+    a = wishart(KA, 32)
+    b = random_rhs(KB, 32)
+    _, k = hybrid.iterations_to_tol(a, b, jnp.zeros_like(b), tol=1e-30,
+                                    max_iters=17)
+    assert int(k) == 17
+
+
+# ----------------------------- distributed --------------------------------
+
+def test_distributed_matches_sequential_ideal():
+    n = 128
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    x_ref = jnp.linalg.solve(a, b)
+    cfg = AnalogConfig(array_size=32)
+    x = distributed.solve_distributed(a, b, KN, cfg, stages=2)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+def test_distributed_with_noise_finite():
+    n = 64
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    cfg = AnalogConfig(array_size=16, nonideal=NonidealConfig(sigma=0.05))
+    x = distributed.solve_distributed(a, b, KN, cfg, stages=1)
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_block_inv():
+    a = wishart(KA, 96)
+    ai = distributed.block_inv(a, 24)
+    np.testing.assert_allclose(np.asarray(ai @ a), np.eye(96),
+                               atol=5e-4)
+
+
+def test_mvm_tiled_vec_matches_dense():
+    n = 64
+    a = wishart(KA, n)
+    v = random_rhs(KB, n)
+    cfg = AnalogConfig(array_size=16)
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    grid = distributed.map_tiled_vec(a, KN, cfg, scale)
+    out = distributed.mvm_tiled_vec(grid, v, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(-(a * scale) @ v),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------ macro model --------------------------------
+
+def test_one_stage_latency_five_cycles():
+    perf = macro.solver_performance("one_stage", n_solves=1)
+    assert perf["latency_cycles"] == 5.0
+
+
+def test_one_stage_shared_opa_serialises():
+    """One shared OPA set: initiation interval == 5 cycles per solve."""
+    perf = macro.solver_performance("one_stage", n_solves=8)
+    assert perf["initiation_interval"] == 5.0
+
+
+def test_two_stage_pipelines_across_macros():
+    """Four macros + dedicated MVM sets: II better than latency."""
+    perf = macro.solver_performance("two_stage", n_solves=8)
+    assert perf["latency_cycles"] > 5.0          # deeper cascade
+    assert perf["initiation_interval"] < perf["latency_cycles"]
+
+
+# --------------------------- area/energy model -----------------------------
+
+def test_area_power_savings_match_paper():
+    """Abstract: 48.83% area and 40% energy saving for one-stage; Fig. 10:
+    12.3% / 37.4% for two-stage."""
+    rep = area_energy.report()
+    sav = area_energy.savings(rep)
+    assert abs(sav["area"]["one_stage"] - 0.4883) < 2e-3
+    assert abs(sav["area"]["two_stage"] - 0.1230) < 2e-3
+    assert abs(sav["power"]["one_stage"] - 0.400) < 2e-3
+    assert abs(sav["power"]["two_stage"] - 0.374) < 2e-3
+
+
+def test_area_totals_match_paper():
+    rep = area_energy.report()
+    assert abs(rep["area"]["original"]["total"] - 0.01577) < 1e-5
+    assert abs(rep["area"]["one_stage"]["total"] - 0.00807) < 1e-4
+    assert abs(rep["area"]["two_stage"]["total"] - 0.01383) < 1e-4
+
+
+def test_unit_costs_positive():
+    cal = area_energy.solve_calibration()
+    for kind in ("area", "power"):
+        u = cal[kind]
+        assert u.opa_fixed > 0 and u.opa_per_width > 0
+        assert u.dac > 0 and u.adc > 0 and u.cell > 0

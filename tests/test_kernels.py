@@ -1,0 +1,171 @@
+"""Pallas kernel tests: shape/dtype sweeps, allclose vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+G0 = 100e-6
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(b, r, c, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    v = jax.random.uniform(k1, (b, c), dtype=jnp.float32, minval=-1, maxval=1)
+    gpos = jax.random.uniform(k2, (r, c), dtype=jnp.float32, maxval=G0)
+    gneg = jax.random.uniform(k3, (r, c), dtype=jnp.float32, maxval=G0)
+    return v.astype(dtype), gpos.astype(dtype), gneg.astype(dtype)
+
+
+# ------------------------------ crossbar_mvm ------------------------------
+
+@pytest.mark.parametrize("b,r,c", [
+    (128, 128, 128),     # single tile
+    (128, 256, 384),     # K-accumulation over 3 steps
+    (256, 128, 256),     # batch grid
+    (32, 100, 72),       # ragged -> padding path
+    (1, 257, 130),       # heavily ragged
+])
+def test_crossbar_matches_ref(b, r, c):
+    v, gpos, gneg = _inputs(b, r, c)
+    out = ops.crossbar_mvm(v, gpos, gneg, g0=G0)
+    expect = ref.crossbar_mvm_ref(v, gpos, gneg, g0=G0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_crossbar_dtypes(dtype):
+    v, gpos, gneg = _inputs(128, 128, 128, dtype=dtype)
+    out = ops.crossbar_mvm(v, gpos, gneg, g0=G0)
+    expect = ref.crossbar_mvm_ref(v, gpos, gneg, g0=G0)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dac,adc", [(8, None), (None, 8), (6, 10), (8, 8)])
+def test_crossbar_quantisation(dac, adc):
+    """DAC before the sum, ADC after the complete sum - bit-exact vs oracle."""
+    v, gpos, gneg = _inputs(128, 128, 256, seed=3)
+    out = ops.crossbar_mvm(v, gpos, gneg, g0=G0, dac_bits=dac, adc_bits=adc)
+    expect = ref.crossbar_mvm_ref(v, gpos, gneg, g0=G0, dac_bits=dac,
+                                  adc_bits=adc)
+    # f32 sum-order differences may flip a value across one ADC step at the
+    # rounding boundary: allow <= 1 LSB.
+    lsb = 2.0 / (2 ** adc - 1) if adc else 0.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=2e-5 + lsb)
+
+
+def test_crossbar_matches_analog_layer():
+    """Kernel == core/analog.py circuit model on the same crossbar pair."""
+    from repro.core import analog
+    from repro.core.analog import AnalogConfig
+    cfg = AnalogConfig(array_size=64)
+    a = jax.random.normal(jax.random.PRNGKey(5), (64, 64)) / 8.0
+    scale = 1.0 / jnp.max(jnp.abs(a))
+    pair = analog.map_matrix(a, jax.random.PRNGKey(6), cfg, scale)
+    v = jax.random.uniform(jax.random.PRNGKey(7), (1, 64), minval=-1, maxval=1)
+    out_kernel = ops.crossbar_mvm(v, pair.gpos, pair.gneg, g0=cfg.g0)[0]
+    out_circuit = analog.amc_mvm(pair, v[0], cfg)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_circuit),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------- schur_gemm -------------------------------
+
+@pytest.mark.parametrize("i,j,k", [
+    (128, 128, 128),
+    (256, 128, 384),
+    (100, 60, 130),      # ragged
+])
+def test_schur_matches_ref(i, j, k):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a4 = jax.random.normal(k1, (i, j))
+    a3 = jax.random.normal(k2, (i, k))
+    w = jax.random.normal(k3, (k, j))
+    out = ops.schur_update(a4, a3, w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.schur_update_ref(a4, a3, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_schur_in_blockamc_context():
+    """Kernel result plugs into the actual Schur pre-processing."""
+    from repro.data.matrices import wishart
+    a = wishart(jax.random.PRNGKey(1), 256)
+    m = 128
+    a1, a2, a3, a4 = a[:m, :m], a[:m, m:], a[m:, :m], a[m:, m:]
+    w = jnp.linalg.solve(a1, a2)
+    out = ops.schur_update(a4, a3, w)
+    expect = a4 - a3 @ w
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_schur_dtypes(dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a4 = jax.random.normal(k1, (128, 128)).astype(dtype)
+    a3 = jax.random.normal(k2, (128, 128)).astype(dtype)
+    w = jax.random.normal(k3, (128, 128)).astype(dtype)
+    out = ops.schur_update(a4, a3, w)
+    expect = ref.schur_update_ref(a4, a3, w)
+    tol = 1e-4 if dtype == jnp.float32 else 0.5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------- flash_attention -----------------------------
+
+def _ref_attn_inputs(bh, s, d, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (bh, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (bh, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (bh, s, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("bh,s,d", [
+    (2, 128, 128),     # single tile
+    (1, 384, 128),     # 3x3 K blocks, causal skipping
+    (2, 200, 128),     # ragged S -> causal padding path
+])
+def test_flash_attention_matches_ref(bh, s, d):
+    q, k, v = _ref_attn_inputs(bh, s, d)
+    out = ops.flash_attention(q, k, v)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    q, k, v = _ref_attn_inputs(2, 256, 128, dtype=dtype)
+    out = ops.flash_attention(q, k, v)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_in_model_layer():
+    """Model attention with use_flash == the q-chunked jnp path."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import attention as attn_mod
+    from repro.models.attention import attention, init_attention
+    cfg = dataclasses.replace(
+        get_config("glm4-9b"), n_layers=1, d_model=256, n_heads=2,
+        kv_heads=1, head_dim=128, vocab=64, d_ff=64,
+        param_dtype="float32", compute_dtype="float32")
+    params = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 256))
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    out_flash = attention(params, x, pos, cfg, use_flash=True)
+    out_chunk = attention(params, x, pos, cfg, use_flash=False)
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_chunk),
+                               rtol=2e-4, atol=2e-4)

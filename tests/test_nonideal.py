@@ -1,0 +1,108 @@
+"""Non-ideality model tests: MNA oracle agreement, limits, statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nonideal
+from repro.data.matrices import wishart, random_rhs
+
+G0 = 100e-6
+
+
+def _positive_array(n, seed=0):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jnp.abs(wishart(ka, n))
+    g = a / jnp.max(a) * G0
+    v = jnp.abs(random_rhs(kb, n)) + 0.1
+    return g, v
+
+
+@pytest.mark.parametrize("n", [8, 16, 24])
+def test_first_order_matches_mna_mvm(n):
+    """Linearised wire model tracks the exact MNA to a few % of the effect."""
+    g, v = _positive_array(n)
+    i_exact = np.asarray(nonideal.mna_mvm_currents(g, v, 1.0))
+    i_ideal = np.asarray(g @ v)
+    i_fo = np.asarray(nonideal.effective_conductance(g, 1.0) @ v)
+    d_exact, d_fo = i_exact - i_ideal, i_fo - i_ideal
+    ratio = np.linalg.norm(d_exact) / np.linalg.norm(d_fo)
+    corr = d_exact @ d_fo / (np.linalg.norm(d_exact) * np.linalg.norm(d_fo))
+    assert 0.9 < ratio < 1.1
+    assert corr > 0.99
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_first_order_matches_mna_inv(n):
+    g, v = _positive_array(n)
+    vo_exact = np.asarray(nonideal.mna_inv_outputs(g, v, 1.0, G0))
+    vo_ideal = np.asarray(-jnp.linalg.solve(g / G0, v))
+    vo_fo = np.asarray(
+        -jnp.linalg.solve(nonideal.effective_conductance(g, 1.0) / G0, v))
+    d_exact, d_fo = vo_exact - vo_ideal, vo_fo - vo_ideal
+    ratio = np.linalg.norm(d_exact) / np.linalg.norm(d_fo)
+    assert 0.9 < ratio < 1.1
+
+
+def test_mna_ideal_limit():
+    """r_seg -> 0 recovers ideal MVM currents and INV outputs."""
+    g, v = _positive_array(12)
+    i = np.asarray(nonideal.mna_mvm_currents(g, v, 1e-8))
+    np.testing.assert_allclose(i, np.asarray(g @ v), rtol=1e-5)
+    vo = np.asarray(nonideal.mna_inv_outputs(g, v, 1e-8, G0))
+    np.testing.assert_allclose(
+        vo, np.asarray(-jnp.linalg.solve(g / G0, v)), rtol=1e-4)
+
+
+def test_effective_conductance_zero_r():
+    g, _ = _positive_array(8)
+    np.testing.assert_array_equal(
+        np.asarray(nonideal.effective_conductance(g, 0.0)), np.asarray(g))
+
+
+def test_effective_conductance_reduces_g():
+    """Wire resistance can only reduce effective conductance (monotone)."""
+    g, _ = _positive_array(16)
+    ge = nonideal.effective_conductance(g, 1.0)
+    assert bool(jnp.all(ge <= g + 1e-12))
+    assert bool(jnp.all(ge >= 0.0))
+
+
+def test_wire_effect_grows_with_size():
+    """Larger arrays suffer more IR drop - the BlockAMC scalability premise."""
+    devs = []
+    for n in [8, 16, 32]:
+        g, v = _positive_array(n)
+        i_ideal = g @ v
+        i_fo = nonideal.effective_conductance(g, 1.0) @ v
+        devs.append(float(jnp.linalg.norm(i_fo - i_ideal)
+                          / jnp.linalg.norm(i_ideal)))
+    assert devs[0] < devs[1] < devs[2]
+
+
+def test_variation_statistics():
+    """Additive sigma*G0 noise: sample std matches, clipped at zero."""
+    g = jnp.full((200, 200), 0.5 * G0)
+    gn = nonideal.apply_variation(g, jax.random.PRNGKey(3), 0.05 * G0)
+    resid = np.asarray(gn - g)
+    assert abs(resid.std() - 0.05 * G0) / (0.05 * G0) < 0.05
+    assert bool(jnp.all(gn >= 0.0))
+
+
+def test_variation_zero_sigma_identity():
+    g, _ = _positive_array(8)
+    gn = nonideal.apply_variation(g, jax.random.PRNGKey(0), 0.0)
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(g))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       r=st.floats(min_value=0.1, max_value=2.0))
+def test_property_effective_conductance_bounds(seed, r):
+    """Property: 0 <= G_eff <= G for any positive array and r in [0.1, 2]."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.uniform(key, (12, 12), minval=0.0, maxval=G0)
+    ge = nonideal.effective_conductance(g, r)
+    assert bool(jnp.all(ge <= g + 1e-15))
+    assert bool(jnp.all(jnp.isfinite(ge)))

@@ -1,0 +1,121 @@
+"""Training-loop behaviour: learning, microbatch equivalence, ckpt/restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.optim.adamw import AdamW
+from repro.train.train_step import init_train_state, make_train_step
+from repro.train.trainer import Trainer
+from tests.conftest import reduce_cfg
+
+
+def _run_cfg(cfg, **kw):
+    base = dict(mode="train", seq_len=32, global_batch=4, remat="dots")
+    base.update(kw)
+    return RunConfig(model=cfg, **base)
+
+
+def test_loss_decreases(tiny_dense):
+    run = _run_cfg(tiny_dense)
+    trainer = Trainer(tiny_dense, run, seed=0, log_every=1000)
+    hist = trainer.run(30)
+    first5 = np.mean(hist["loss"][:5])
+    last5 = np.mean(hist["loss"][-5:])
+    assert last5 < first5 - 0.1, (first5, last5)
+
+
+def test_microbatch_equivalence(tiny_dense):
+    """4 microbatches must produce (nearly) the same update as 1 big batch."""
+    cfg = tiny_dense
+    opt = AdamW(lr=1e-3)
+    run1 = _run_cfg(cfg)
+    run4 = _run_cfg(cfg, microbatch=1)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, run1, opt)
+    batch = SyntheticLM(cfg, run1, seed=3).batch(0)
+    s1, m1 = jax.jit(make_train_step(cfg, run1, opt))(state, batch)
+    s4, m4 = jax.jit(make_train_step(cfg, run4, opt))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_checkpoint_roundtrip(tiny_dense, tmp_path):
+    run = _run_cfg(tiny_dense)
+    opt = AdamW(lr=1e-3)
+    state, _ = init_train_state(jax.random.PRNGKey(0), tiny_dense, run, opt)
+    save_checkpoint(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    restored = restore_checkpoint(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tiny_dense, tmp_path):
+    """A .tmp dir from a crashed save must not be visible as a checkpoint."""
+    run = _run_cfg(tiny_dense)
+    opt = AdamW(lr=1e-3)
+    state, _ = init_train_state(jax.random.PRNGKey(0), tiny_dense, run, opt)
+    save_checkpoint(str(tmp_path), 1, state)
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_trainer_resume(tiny_dense, tmp_path):
+    """Kill after N steps; a new Trainer resumes from the checkpoint."""
+    run = _run_cfg(tiny_dense)
+    t1 = Trainer(tiny_dense, run, ckpt_dir=str(tmp_path), ckpt_every=5,
+                 log_every=1000)
+    t1.run(10)
+    assert latest_step(str(tmp_path)) == 10
+    t2 = Trainer(tiny_dense, run, ckpt_dir=str(tmp_path), ckpt_every=5,
+                 log_every=1000)
+    assert t2.start_step == 10
+    # resumed state equals the state that was checkpointed
+    for a, b in zip(jax.tree.leaves(t1.state.params),
+                    jax.tree.leaves(t2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    hist = t2.run(3)
+    assert hist["step"] == [10, 11, 12]
+
+
+def test_checkpoint_manager_async(tiny_dense, tmp_path):
+    run = _run_cfg(tiny_dense)
+    opt = AdamW(lr=1e-3)
+    state, _ = init_train_state(jax.random.PRNGKey(0), tiny_dense, run, opt)
+    mgr = CheckpointManager(str(tmp_path), every=2, keep=2)
+    for step in range(1, 9):
+        mgr.maybe_save(step, state)
+    mgr.wait()
+    # keep=2: only the last two checkpoints survive gc
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(str(tmp_path))
+                   if n.startswith("step_"))
+    assert steps == [6, 8]
+
+
+def test_data_pipeline_determinism(tiny_dense):
+    run = _run_cfg(tiny_dense)
+    d1 = SyntheticLM(tiny_dense, run, seed=5).batch(3)
+    d2 = SyntheticLM(tiny_dense, run, seed=5).batch(3)
+    np.testing.assert_array_equal(np.asarray(d1["tokens"]),
+                                  np.asarray(d2["tokens"]))
+    d3 = SyntheticLM(tiny_dense, run, seed=5).batch(4)
+    assert not np.array_equal(np.asarray(d1["tokens"]),
+                              np.asarray(d3["tokens"]))
+
+
+def test_labels_are_next_tokens(tiny_dense):
+    run = _run_cfg(tiny_dense)
+    b = SyntheticLM(tiny_dense, run, seed=1).batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
