@@ -37,21 +37,47 @@ def matrix_of(family: str, key, n: int):
     return wishart(key, n) if family == "wishart" else toeplitz(key, n)
 
 
-def mc_errors(family: str, n: int, cfg: AnalogConfig, solver: str,
-              n_sims: int = N_SIMS_PAPER, stages=None, seed: int = 0
-              ) -> np.ndarray:
-    """Relative errors over `n_sims` independent device-noise draws."""
+def _mc_problem(family: str, n: int, n_sims: int, seed: int):
     ka, kb = jax.random.split(jax.random.PRNGKey(seed))
     a = matrix_of(family, ka, n)
     b = random_rhs(kb, n)
-    x_ref = jnp.linalg.solve(a, b)
     keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_sims)
+    return a, b, jnp.linalg.solve(a, b), keys
 
+
+def mc_solutions(a, b, keys, cfg: AnalogConfig, solver: str, stages=None):
+    """All Monte-Carlo solutions in one jit via the flat batched executor."""
+    if solver == "original":
+        return blockamc.solve_original_batched(a, b, keys, cfg)
+    return blockamc.solve_batched(a, b, keys, cfg, stages=stages)
+
+
+def mc_solutions_recursive(a, b, keys, cfg: AnalogConfig, solver: str,
+                           stages=None):
+    """The per-seed recursive tree walk (pre-flat-executor reference path).
+
+    Kept for the kernel_bench recursive-vs-batched comparison and as the
+    executor-equivalence oracle; the default Monte-Carlo path is
+    `mc_solutions`.
+    """
     if solver == "original":
         fn = lambda k: blockamc.solve_original(a, b, k, cfg)
     else:
         fn = lambda k: blockamc.solve(a, b, k, cfg, stages=stages)
-    xs = jax.lax.map(fn, keys)          # sequential map: modest memory
+    return jax.lax.map(fn, keys)        # sequential map: modest memory
+
+
+def mc_errors(family: str, n: int, cfg: AnalogConfig, solver: str,
+              n_sims: int = N_SIMS_PAPER, stages=None, seed: int = 0,
+              batched: bool = True) -> np.ndarray:
+    """Relative errors over `n_sims` independent device-noise draws.
+
+    batched=True (default) runs every seed in one level-scheduled batched
+    solve; batched=False keeps the sequential recursive walk per seed.
+    """
+    a, b, x_ref, keys = _mc_problem(family, n, n_sims, seed)
+    run = mc_solutions if batched else mc_solutions_recursive
+    xs = run(a, b, keys, cfg, solver, stages=stages)
     errs = jax.vmap(lambda x: relative_error(x_ref, x))(xs)
     return np.asarray(errs)
 

@@ -14,7 +14,10 @@ from repro.core.analog import AnalogConfig
 from repro.core.nonideal import NonidealConfig
 
 
-def run(n_sims: int = N_SIMS_PAPER, sizes=SIZES_PAPER):
+def run(n_sims=None, sizes=None):
+    # resolve module attrs at call time so run.py's fast-mode overrides stick
+    n_sims = N_SIMS_PAPER if n_sims is None else n_sims
+    sizes = SIZES_PAPER if sizes is None else sizes
     out = {}
     for family in ("wishart", "toeplitz"):
         rows = []
@@ -41,8 +44,9 @@ def main():
         better = sum(1 for r in rows if r["block_median"] <= r["orig_median"])
         big = rows[-1]
         csv_row(f"fig7_{family}_block_better", 0.0,
-                f"{better}/{len(rows)} sizes;n512_block={big['block_median']:.3f};"
-                f"n512_orig={big['orig_median']:.3f}")
+                f"{better}/{len(rows)} sizes;"
+                f"n{big['n']}_block={big['block_median']:.3f};"
+                f"n{big['n']}_orig={big['orig_median']:.3f}")
     return out
 
 

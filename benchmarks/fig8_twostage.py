@@ -15,7 +15,9 @@ from repro.core.nonideal import NonidealConfig
 SIZES = (64, 128, 256, 512)
 
 
-def run(n_sims: int = N_SIMS_PAPER):
+def run(n_sims=None):
+    # resolve at call time so run.py's fast-mode overrides stick
+    n_sims = N_SIMS_PAPER if n_sims is None else n_sims
     rows = []
     for n in SIZES:
         cfg = AnalogConfig(array_size=max(n // 4, 4),

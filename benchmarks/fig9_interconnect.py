@@ -15,7 +15,9 @@ from repro.core.nonideal import NonidealConfig
 SIZES = (16, 32, 64, 128, 256, 512)
 
 
-def run(n_sims: int = N_SIMS_PAPER):
+def run(n_sims=None):
+    # resolve at call time so run.py's fast-mode overrides stick
+    n_sims = N_SIMS_PAPER if n_sims is None else n_sims
     ni = NonidealConfig(sigma=0.05, r_wire=1.0)
     ni_comp = NonidealConfig(sigma=0.05, r_wire=1.0, compensate_wire=True)
     out = {}
@@ -45,7 +47,7 @@ def main():
         r = rows[-1]
         red1 = (r["orig_median"] - r["one_stage_median"]) / r["orig_median"]
         red2 = (r["orig_median"] - r["two_stage_median"]) / r["orig_median"]
-        csv_row(f"fig9_{family}_n512", 0.0,
+        csv_row(f"fig9_{family}_n{r['n']}", 0.0,
                 f"orig={r['orig_median']:.3f};one={r['one_stage_median']:.3f};"
                 f"two={r['two_stage_median']:.3f};red1={red1:.1%};red2={red2:.1%}")
         csv_row(f"fig9_{family}_compensated", 0.0,

@@ -8,17 +8,50 @@ touched per call.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, save_json, timed
+from benchmarks.common import (csv_row, mc_solutions, mc_solutions_recursive,
+                               save_json, timed, _mc_problem)
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
 from repro.kernels import ops, ref
 
 G0 = 100e-6
 
 
+def mc_path_bench(out, n_sims: int = 40):
+    """Batched level-scheduled Monte-Carlo path vs the per-seed recursive
+    tree walk it replaced (paper Fig. 8 two-stage configs).
+
+    The win comes from batching the many small leaf arrays across seeds
+    (e.g. 16x 64x64 for the 256^2 two-stage solve); at large leaf sizes a
+    single LU already saturates the core and the two paths converge.
+    """
+    for n in (64, 256):
+        stages = 2
+        cfg = AnalogConfig(array_size=n // 4,
+                           nonideal=NonidealConfig(sigma=0.05))
+        a, b, _, keys = _mc_problem("wishart", n, n_sims, seed=0)
+        batched = functools.partial(mc_solutions, solver="blockamc",
+                                    stages=stages)
+        recursive = jax.jit(functools.partial(
+            mc_solutions_recursive, solver="blockamc", stages=stages,
+            cfg=cfg))
+        us_new = timed(lambda: batched(a, b, keys, cfg))
+        us_old = timed(lambda: recursive(a, b, keys))
+        speedup = us_old / us_new
+        csv_row(f"mc_batched_n{n}_s{stages}", us_new,
+                f"recursive={us_old:.1f}us;speedup={speedup:.2f}x")
+        out[f"mc_n{n}"] = {"batched_us": us_new, "recursive_us": us_old,
+                           "speedup": speedup}
+
+
 def main():
     out = {}
+    mc_path_bench(out)
     for b, r, c in ((256, 512, 512), (512, 1024, 1024)):
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
         v = jax.random.uniform(k1, (b, c), minval=-1, maxval=1)
@@ -30,6 +63,22 @@ def main():
         gb = (v.size + gp.size + gn.size + b * r) * 4 / 1e9
         csv_row(f"crossbar_mvm_ref_{b}x{r}x{c}", us, f"GB={gb:.3f}")
         out[f"crossbar_{b}x{r}x{c}"] = us
+
+    # Leading-dim batched entry point: one (L, R, C) shape-bucket stack of
+    # the flat executor driven in a single call (oracle path timed; the
+    # Pallas kernel is parity-checked in tests/test_kernels.py).
+    for l, b, r, c in ((16, 64, 64, 64), (16, 128, 128, 128)):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        v = jax.random.uniform(k1, (l, b, c), minval=-1, maxval=1)
+        gp = jax.random.uniform(k2, (l, r, c), maxval=G0)
+        gn = jax.random.uniform(k3, (l, r, c), maxval=G0)
+        fn = jax.jit(jax.vmap(lambda vv, gpp, gnn: ref.crossbar_mvm_ref(
+            vv, gpp, gnn, g0=G0, dac_bits=8, adc_bits=8)))
+        us = timed(fn, v, gp, gn)
+        gb = (v.size + gp.size + gn.size + l * b * r) * 4 / 1e9
+        csv_row(f"crossbar_mvm_batched_ref_{l}x{b}x{r}x{c}", us,
+                f"GB={gb:.3f}")
+        out[f"crossbar_batched_{l}x{b}x{r}x{c}"] = us
 
     for n in (512, 1024):
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)

@@ -23,6 +23,7 @@ paper's accuracy study isolates device/wire effects).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
@@ -153,8 +154,16 @@ def _row_load(pair: CrossbarPair, cfg: AnalogConfig) -> jnp.ndarray:
     return cfg.g0 + jnp.sum(pair.gpos + pair.gneg, axis=1)
 
 
+def _per_row(load: jnp.ndarray, out: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a per-row quantity against a vector or (rows, k) matrix."""
+    return load[:, None] if out.ndim == 2 else load
+
+
 def amc_mvm(pair: CrossbarPair, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
     """MVM circuit: v_out = -A_eff @ v_in (TIA feedback sign included).
+
+    `v_in` may be a vector (cols,) or a matrix (cols, k) of k simultaneous
+    input vectors (time-multiplexed drive of the same programmed array).
 
     With finite OPA open-loop gain A_ol, the TIA summing node sits at
     v_s = -v_out/A_ol instead of 0, giving
@@ -163,7 +172,7 @@ def amc_mvm(pair: CrossbarPair, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.nda
     out = -(pair.a_eff(cfg) @ v_in)
     if cfg.opa_gain is not None:
         load = _row_load(pair, cfg)
-        out = out / (1.0 + load / (cfg.opa_gain * cfg.g0))
+        out = out / (1.0 + _per_row(load, out) / (cfg.opa_gain * cfg.g0))
     return out
 
 
@@ -172,8 +181,8 @@ def amc_inv(pair: CrossbarPair, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.nda
 
     The equilibrium of the nested feedback loops of Fig. 1(b); solved
     digitally here (the behavioural stand-in for the one-step analog solve).
-    With finite OPA gain, KCL at summing node i (held at -v_out_i/A_ol)
-    adds a diagonal loading term:
+    `v_in` may be (n,) or (n, k).  With finite OPA gain, KCL at summing
+    node i (held at -v_out_i/A_ol) adds a diagonal loading term:
         (G + diag(load)/A_ol) v_out = -G0 v_in.
     """
     a = pair.a_eff(cfg)
@@ -278,6 +287,86 @@ def amc_mvm_tiled(grid, v_in: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
         if cfg.opa_gain is not None:
             # The tiles of one tile-row share the row TIAs (analog current
             # summing), so the summing-node load is the whole tile-row's.
-            acc = acc / (1.0 + load / (cfg.opa_gain * cfg.g0))
+            acc = acc / (1.0 + _per_row(load, acc) / (cfg.opa_gain * cfg.g0))
         out_rows.append(acc)
     return jnp.concatenate(out_rows)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-tile form (shared by the flat BlockAMC executor and the
+# distributed solver; formerly private to core/distributed.py)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class TileGrid:
+    """A stacked differential crossbar tile tensor: (..., rows, cols).
+
+    The leading axes are arbitrary batch/tile axes - (rt, ct, s, s) for the
+    distributed solver's 2-D tile layout, (num_tiles, r, c) for the flat
+    executor's shape buckets, possibly with an extra Monte-Carlo axis in
+    front under vmap.  The trailing two axes are one physical array.
+    """
+
+    def __init__(self, gpos, gneg, scale, g0):
+        self.gpos = gpos
+        self.gneg = gneg
+        self.scale = scale
+        self.g0 = g0
+
+    def tree_flatten(self):
+        return (self.gpos, self.gneg, self.scale), (self.g0,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    @property
+    def shape(self):
+        return self.gpos.shape
+
+    def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
+        ni = cfg.nonideal
+        gp, gn = self.gpos, self.gneg
+        if ni.wire_model == "first_order" and ni.r_wire > 0.0:
+            fo = partial(nonideal.effective_conductance, r_seg=ni.r_wire)
+            lead = gp.shape[:-2]
+            if lead:
+                flat = gp.reshape((-1,) + gp.shape[-2:])
+                gp = jax.vmap(fo)(flat).reshape(gp.shape)
+                flat = gn.reshape((-1,) + gn.shape[-2:])
+                gn = jax.vmap(fo)(flat).reshape(gn.shape)
+            else:
+                gp, gn = fo(gp), fo(gn)
+        return (gp - gn) / self.g0
+
+    def pair(self, idx) -> CrossbarPair:
+        """View one tile of the stack as a CrossbarPair (static index)."""
+        return CrossbarPair(self.gpos[idx], self.gneg[idx], self.scale, self.g0)
+
+
+def stack_pairs(pairs, scale, g0) -> TileGrid:
+    """Stack same-shape CrossbarPairs into a (num, r, c) TileGrid."""
+    return TileGrid(jnp.stack([p.gpos for p in pairs]),
+                    jnp.stack([p.gneg for p in pairs]), scale, g0)
+
+
+def map_tiled_vec(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+                  scale: jnp.ndarray) -> TileGrid:
+    """Map an (R x C) matrix onto an (rt, ct, s, s) tile tensor.
+
+    R and C must be multiples of cfg.array_size (the vectorised path keeps
+    power-of-two sizes; `map_tiled` handles ragged shapes).
+    """
+    s = cfg.array_size
+    rows, cols = a.shape
+    assert rows % s == 0 and cols % s == 0, (rows, cols, s)
+    rt, ct = rows // s, cols // s
+    tiles = a.reshape(rt, s, ct, s).transpose(0, 2, 1, 3)  # (rt, ct, s, s)
+    a_norm = tiles * scale
+    gpos_t = jnp.maximum(a_norm, 0.0) * cfg.g0
+    gneg_t = jnp.maximum(-a_norm, 0.0) * cfg.g0
+    kp, kn = jax.random.split(key)
+    sg = cfg.nonideal.sigma * cfg.g0
+    gpos = nonideal.apply_variation(gpos_t, kp, sg)
+    gneg = nonideal.apply_variation(gneg_t, kn, sg)
+    return TileGrid(gpos, gneg, scale, cfg.g0)

@@ -33,17 +33,30 @@ The implementation is plan/execute:
 
 Both are pure functions of their inputs (vmap-able over noise keys for the
 paper's 40-seed Monte Carlo, and jit-able end to end).
+
+On top of the recursive reference executor sits the *flat* level-scheduled
+executor (`compile_plan` / `execute_flat` / `solve_batched`): the recursive
+plan is compiled once into shape-bucketed stacks of physical arrays (e.g. a
+two-stage 256x256 solve becomes 16 arrays of 64x64, stored as a handful of
+(num_arrays, 64, 64) conductance tensors - paper Fig. 8) plus a static
+straight-line schedule over virtual registers.  Execution is a short loop
+over schedule levels; every level is one batched analog op, so vmapping over
+Monte-Carlo noise keys and right-hand sides turns the whole cascade into a
+few large batched matmuls/solves instead of a per-seed tree walk.  The
+recursive executor stays as the bit-level reference the flat executor is
+tested against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from functools import partial
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import analog
-from repro.core.analog import AnalogConfig, CrossbarPair
+from repro.core.analog import AnalogConfig, CrossbarPair, TileGrid
 
 
 # ---------------------------------------------------------------------------
@@ -214,3 +227,252 @@ def solve_original(a: jnp.ndarray, b: jnp.ndarray, key: jax.Array,
                    cfg: AnalogConfig) -> jnp.ndarray:
     """Baseline: original (monolithic) AMC solve."""
     return execute(build_original_plan(a, key, cfg), b, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Flat (level-scheduled) executor
+#
+# compile_plan() walks a SolvePlan once at trace time and lowers it to
+#   * stacked conductance tensors: every physical array of the cascade is
+#     interned into a (depth, shape) bucket, so all same-shape arrays at the
+#     same cascade depth live in one (num_arrays, rows, cols) TileGrid, and
+#   * a static straight-line schedule of levels over virtual registers.
+#
+# Each schedule level is exactly one analog operation (a leaf INV, a tiled
+# MVM, an analog summation, or a wiring step), so executing a plan is a short
+# Python loop whose body is entirely batched jnp ops - no tree recursion at
+# run time.  Because the schedule and all shapes are static, `execute_flat`
+# vmaps/jits cleanly: batching over Monte-Carlo noise keys adds a leading
+# axis to every stack and turns each level into one batched matmul or
+# batched solve, which is how the hot Monte-Carlo path scales with the
+# *number of arrays* instead of the depth of the tree.
+# ---------------------------------------------------------------------------
+
+# Schedule instruction set (all operands are static Python ints):
+#   ("slice", src, lo, hi)        reg = regs[src][lo:hi]      (partition wiring)
+#   ("inv",   bucket, idx, src)   reg = amc_inv(inv_stack[bucket][idx], regs[src])
+#   ("mvm",   rows, src)          reg = amc_mvm_tiled(grid, regs[src]); `rows`
+#                                 is a tuple of tile-rows of (bucket, idx)
+#                                 refs into the MVM stacks
+#   ("add",   s1, r1, s2, r2)     reg = s1*regs[r1] + s2*regs[r2], s in {+1,-1}
+#                                 (analog current summation at a summing node)
+#   ("catneg", r1, r2)            reg = concat([regs[r1], -regs[r2]])
+#                                 (reassemble [ -y ; -z ] from cascade halves)
+
+
+@jax.tree_util.register_pytree_node_class
+class FlatPlan:
+    """Level-scheduled form of a SolvePlan.
+
+    `inv_stacks` / `mvm_stacks` are tuples of TileGrid, one per
+    (cascade depth, array shape) bucket; entry i of a stack holds physical
+    array i of that bucket as programmed (identical conductances to the
+    recursive plan it was compiled from).  `schedule` is the static level
+    program; `inv_keys` / `mvm_keys` record each bucket's (depth, shape)
+    for introspection and tests.
+    """
+
+    def __init__(self, inv_stacks, mvm_stacks, scale, schedule, n,
+                 inv_keys, mvm_keys):
+        self.inv_stacks = inv_stacks
+        self.mvm_stacks = mvm_stacks
+        self.scale = scale
+        self.schedule = schedule
+        self.n = n
+        self.inv_keys = inv_keys
+        self.mvm_keys = mvm_keys
+
+    def tree_flatten(self):
+        return ((self.inv_stacks, self.mvm_stacks, self.scale),
+                (self.schedule, self.n, self.inv_keys, self.mvm_keys))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        inv_stacks, mvm_stacks, scale = children
+        return cls(inv_stacks, mvm_stacks, scale, *aux)
+
+    @property
+    def num_arrays(self) -> int:
+        """Total physical arrays of the cascade (16 for 256^2 two-stage)."""
+        return sum(g.shape[-3] for g in self.inv_stacks) + \
+            sum(g.shape[-3] for g in self.mvm_stacks)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.schedule)
+
+
+class _Interner:
+    """Dedupes physical arrays into (depth, shape)-bucketed stacking lists.
+
+    The same CrossbarPair object can be referenced several times by the
+    schedule (A1 serves cascade steps 1 and 5), but is programmed - and
+    therefore stacked - exactly once.
+    """
+
+    def __init__(self):
+        self.key_to_bucket = {}
+        self.lists = []
+        self.keys = []
+        self._memo = {}
+
+    def ref(self, key, pair) -> Tuple[int, int]:
+        tag = id(pair)
+        if tag in self._memo:
+            return self._memo[tag]
+        if key not in self.key_to_bucket:
+            self.key_to_bucket[key] = len(self.lists)
+            self.lists.append([])
+            self.keys.append(key)
+        bucket = self.key_to_bucket[key]
+        self.lists[bucket].append(pair)
+        out = (bucket, len(self.lists[bucket]) - 1)
+        self._memo[tag] = out
+        return out
+
+
+def compile_plan(plan: SolvePlan) -> FlatPlan:
+    """Lower a recursive SolvePlan to its level-scheduled flat form.
+
+    Pure restructuring: the stacked conductances are exactly the recursive
+    plan's (same noise draws), so both executors compute with identical
+    arrays.  Traceable (works under jit/vmap over noise keys).
+    """
+    invs, mvms = _Interner(), _Interner()
+    prog = []
+    n_regs = [1]                      # register 0 is the cascade input
+
+    def emit(instr) -> int:
+        prog.append(instr)
+        r = n_regs[0]
+        n_regs[0] += 1
+        return r
+
+    def emit_inv(p: Plan, src: int, depth: int) -> int:
+        if isinstance(p, LeafInvPlan):
+            bucket, idx = invs.ref((depth, p.pair.shape), p.pair)
+            return emit(("inv", bucket, idx, src))
+        m, n = p.m, p.n
+        f = emit(("slice", src, 0, m))
+        g = emit(("slice", src, m, n))
+        # Five-step cascade (Algorithm 1), one schedule level per step.
+        neg_yt = emit_inv(p.inv1, f, depth + 1)                  # step 1
+        rows3 = tuple(tuple(mvms.ref((depth, t.shape), t) for t in row)
+                      for row in p.mvm3)
+        gt = emit(("mvm", rows3, neg_yt))                        # step 2
+        neg_gs = emit(("add", -1, g, 1, gt))
+        z = emit_inv(p.inv4s, neg_gs, depth + 1)                 # step 3
+        rows2 = tuple(tuple(mvms.ref((depth, t.shape), t) for t in row)
+                      for row in p.mvm2)
+        neg_ft = emit(("mvm", rows2, z))                         # step 4
+        fs = emit(("add", 1, f, 1, neg_ft))
+        neg_y = emit_inv(p.inv1, fs, depth + 1)                  # step 5
+        return emit(("catneg", neg_y, z))
+
+    emit_inv(plan.root, 0, 0)
+    g0 = _first_pair(plan.root).g0
+    inv_stacks = tuple(analog.stack_pairs(ps, plan.scale, g0)
+                       for ps in invs.lists)
+    mvm_stacks = tuple(analog.stack_pairs(ps, plan.scale, g0)
+                       for ps in mvms.lists)
+    return FlatPlan(inv_stacks, mvm_stacks, plan.scale, tuple(prog),
+                    plan.root.n, tuple(invs.keys), tuple(mvms.keys))
+
+
+def _first_pair(p: Plan) -> CrossbarPair:
+    return p.pair if isinstance(p, LeafInvPlan) else _first_pair(p.inv1)
+
+
+def build_flat_plan(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+                    stages: Optional[int] = None) -> FlatPlan:
+    """Convenience: build_plan + compile_plan."""
+    return compile_plan(build_plan(a, key, cfg, stages))
+
+
+def _inv_operators(grid: TileGrid, cfg: AnalogConfig) -> jnp.ndarray:
+    """The (num, s, s) matrices one INV bucket's circuits solve with.
+
+    Matches analog.amc_inv: effective conductance matrix plus the diagonal
+    summing-node loading term under finite OPA gain.
+    """
+    a = grid.a_eff(cfg)
+    if cfg.opa_gain is not None:
+        load = (cfg.g0 + jnp.sum(grid.gpos + grid.gneg, axis=-1)) \
+            / (cfg.opa_gain * cfg.g0)
+        a = a + load[..., :, None] * jnp.eye(a.shape[-1], dtype=a.dtype)
+    return a
+
+
+def execute_flat(fplan: FlatPlan, b: jnp.ndarray, cfg: AnalogConfig
+                 ) -> jnp.ndarray:
+    """Run the level schedule; returns x like `execute`.
+
+    `b` may be a vector (n,) or a matrix (n, k) of k right-hand sides -
+    every schedule level then computes all k solves in one batched op.
+
+    Program-once / solve-many: every leaf INV operator is factorised once
+    per bucket (one batched LU per stack), and the schedule's INV levels
+    reuse the factors - cascade steps 1 and 5 share A1's factorisation
+    exactly as the hardware reuses the programmed array.
+    """
+    lu_stacks = [jax.scipy.linalg.lu_factor(_inv_operators(g, cfg))
+                 for g in fplan.inv_stacks]
+    regs = [analog.dac(b, cfg)]
+    for instr in fplan.schedule:
+        op = instr[0]
+        if op == "slice":
+            _, src, lo, hi = instr
+            regs.append(regs[src][lo:hi])
+        elif op == "inv":
+            _, bucket, idx, src = instr
+            lu, piv = lu_stacks[bucket]
+            regs.append(-jax.scipy.linalg.lu_solve((lu[idx], piv[idx]),
+                                                   regs[src]))
+        elif op == "mvm":
+            _, rows, src = instr
+            grid = [[fplan.mvm_stacks[bk].pair(i) for bk, i in row]
+                    for row in rows]
+            regs.append(analog.amc_mvm_tiled(grid, regs[src], cfg))
+        elif op == "add":
+            _, s1, r1, s2, r2 = instr
+            x1 = regs[r1] if s1 > 0 else -regs[r1]
+            x2 = regs[r2] if s2 > 0 else -regs[r2]
+            regs.append(x1 + x2)
+        elif op == "catneg":
+            _, r1, r2 = instr
+            regs.append(jnp.concatenate([regs[r1], -regs[r2]]))
+        else:  # pragma: no cover - compile_plan only emits the ops above
+            raise ValueError(f"unknown schedule op {op!r}")
+    return -fplan.scale * analog.adc(regs[-1], cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg", "stages"))
+def solve_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
+                  cfg: AnalogConfig, stages: Optional[int] = None
+                  ) -> jnp.ndarray:
+    """Batched Monte-Carlo BlockAMC solve in one jit.
+
+    Builds and compiles one flat plan per noise key with a single vmap (the
+    key-independent digital pre-processing - partitioning, Schur complements,
+    normalisation - is traced once and shared), then executes the level
+    schedule with all keys and right-hand sides batched: each level is one
+    batched solve/matmul over (num_keys, ...) stacks.
+
+    Args:
+      a:    (n, n) system matrix.
+      b:    (n,) rhs vector or (n, k) matrix of k right-hand sides.
+      keys: (num_keys, ...) PRNG keys, one independent device-noise draw each.
+    Returns:
+      (num_keys, n) or (num_keys, n, k) solutions.
+    """
+    fplans = jax.vmap(lambda k: build_flat_plan(a, k, cfg, stages))(keys)
+    return jax.vmap(lambda fp: execute_flat(fp, b, cfg))(fplans)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_original_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
+                           cfg: AnalogConfig) -> jnp.ndarray:
+    """Batched Monte-Carlo baseline: original (monolithic) AMC solve."""
+    fplans = jax.vmap(
+        lambda k: compile_plan(build_original_plan(a, k, cfg)))(keys)
+    return jax.vmap(lambda fp: execute_flat(fp, b, cfg))(fplans)

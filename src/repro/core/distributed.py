@@ -21,69 +21,16 @@ lowers n = 65536 on the production 16x16 mesh.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import analog, nonideal
 from repro.core.analog import AnalogConfig
-
-
-# ---------------------------------------------------------------------------
-# Vectorised tile mapping (the array-of-arrays form of analog.map_tiled)
-# ---------------------------------------------------------------------------
-
-@jax.tree_util.register_pytree_node_class
-class TileGrid:
-    """A (rt, ct, s, s) differential crossbar tile tensor."""
-
-    def __init__(self, gpos, gneg, scale, g0):
-        self.gpos = gpos
-        self.gneg = gneg
-        self.scale = scale
-        self.g0 = g0
-
-    def tree_flatten(self):
-        return (self.gpos, self.gneg, self.scale), (self.g0,)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, aux[0])
-
-    def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
-        ni = cfg.nonideal
-        gp, gn = self.gpos, self.gneg
-        if ni.wire_model == "first_order" and ni.r_wire > 0.0:
-            fo = partial(nonideal.effective_conductance, r_seg=ni.r_wire)
-            gp = jax.vmap(jax.vmap(fo))(gp)
-            gn = jax.vmap(jax.vmap(fo))(gn)
-        return (gp - gn) / self.g0
-
-
-def map_tiled_vec(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
-                  scale: jnp.ndarray) -> TileGrid:
-    """Map an (R x C) matrix onto an (rt, ct, s, s) tile tensor.
-
-    R and C must be multiples of cfg.array_size (the distributed path keeps
-    power-of-two sizes; the sequential path in blockamc.py handles ragged).
-    """
-    s = cfg.array_size
-    rows, cols = a.shape
-    assert rows % s == 0 and cols % s == 0, (rows, cols, s)
-    rt, ct = rows // s, cols // s
-    tiles = a.reshape(rt, s, ct, s).transpose(0, 2, 1, 3)  # (rt, ct, s, s)
-    a_norm = tiles * scale
-    gpos_t = jnp.maximum(a_norm, 0.0) * cfg.g0
-    gneg_t = jnp.maximum(-a_norm, 0.0) * cfg.g0
-    kp, kn = jax.random.split(key)
-    sg = cfg.nonideal.sigma * cfg.g0
-    gpos = nonideal.apply_variation(gpos_t, kp, sg)
-    gneg = nonideal.apply_variation(gneg_t, kn, sg)
-    return TileGrid(gpos, gneg, scale, cfg.g0)
+# Stacked-tile form lives in core/analog.py (shared with the flat
+# level-scheduled executor); re-exported here for backward compatibility.
+from repro.core.analog import TileGrid, map_tiled_vec
 
 
 def mvm_tiled_vec(grid: TileGrid, v: jnp.ndarray, cfg: AnalogConfig,

@@ -98,3 +98,72 @@ def crossbar_mvm(v: jnp.ndarray, gpos: jnp.ndarray, gneg: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
         interpret=interpret,
     )(v, gpos, gneg)
+
+
+def _crossbar_mvm_batched_kernel(v_ref, gpos_ref, gneg_ref, out_ref, *,
+                                 n_ck: int, inv_g0: float,
+                                 dac_bits: int | None, adc_bits: int | None,
+                                 fullscale: float):
+    ck = pl.program_id(3)
+
+    @pl.when(ck == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = _quantize(v_ref[0].astype(jnp.float32), dac_bits, fullscale)
+    g = (gpos_ref[0] - gneg_ref[0]).astype(jnp.float32)
+    out_ref[0, ...] += jax.lax.dot_general(
+        v, g, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ck == n_ck - 1)
+    def _finish():
+        acc = out_ref[...] * (-inv_g0)
+        out_ref[...] = _quantize(acc, adc_bits, fullscale)
+
+
+def crossbar_mvm_batched(v: jnp.ndarray, gpos: jnp.ndarray,
+                         gneg: jnp.ndarray, *, g0: float,
+                         dac_bits: int | None = None,
+                         adc_bits: int | None = None,
+                         fullscale: float = 1.0, block_b: int = 128,
+                         block_r: int = 128, block_c: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Leading-dim batched crossbar MVM: one grid axis per physical array.
+
+    The flat BlockAMC executor stacks all same-shape arrays of one cascade
+    level into (L, R, C) conductance tensors; this entry point drives the
+    whole stack in one pallas_call - the leading grid axis walks the arrays
+    (so every array's tiles stream HBM->VMEM once) and the inner three axes
+    are the standard batched-MVM grid.
+
+    Args:
+      v:    (L, B, C) per-array input voltage batches.
+      gpos: (L, R, C) positive conductance stacks.
+      gneg: (L, R, C) negative conductance stacks.
+    Returns:
+      (L, B, R) float32: per-array -ADC((gpos - gneg) @ DAC(v) / g0).
+    Trailing dims must be multiples of the block sizes (ops.py pads).
+    """
+    l, b, c = v.shape
+    l2, r, c2 = gpos.shape
+    assert l == l2 and c == c2 and gpos.shape == gneg.shape
+    assert b % block_b == 0 and r % block_r == 0 and c % block_c == 0, \
+        (v.shape, gpos.shape, (block_b, block_r, block_c))
+    n_ck = c // block_c
+    grid = (l, b // block_b, r // block_r, n_ck)
+    kernel = functools.partial(
+        _crossbar_mvm_batched_kernel, n_ck=n_ck, inv_g0=1.0 / g0,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, block_c), lambda a, i, j, k: (a, i, k)),
+            pl.BlockSpec((1, block_r, block_c), lambda a, i, j, k: (a, j, k)),
+            pl.BlockSpec((1, block_r, block_c), lambda a, i, j, k: (a, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, block_r),
+                               lambda a, i, j, k: (a, i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, b, r), jnp.float32),
+        interpret=interpret,
+    )(v, gpos, gneg)

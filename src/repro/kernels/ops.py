@@ -50,6 +50,31 @@ def crossbar_mvm(v, gpos, gneg, *, g0: float, dac_bits=None, adc_bits=None,
     return out[:b, :r]
 
 
+@partial(jax.jit, static_argnames=("g0", "dac_bits", "adc_bits", "fullscale",
+                                   "interpret"))
+def crossbar_mvm_batched(v, gpos, gneg, *, g0: float, dac_bits=None,
+                         adc_bits=None, fullscale: float = 1.0,
+                         interpret: bool | None = None):
+    """Leading-dim batched crossbar MVM over a stack of physical arrays.
+
+    v: (L, B, C), gpos/gneg: (L, R, C) -> (L, B, R).  The leading axis L
+    (one entry per array of a flat-executor shape bucket) is a grid axis,
+    never padded; trailing dims pad to 128s.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    l, b, c = v.shape
+    r = gpos.shape[1]
+    blk = 128
+    vp = _pad_to(v, (1, blk, blk))
+    gp = _pad_to(gpos, (1, blk, blk))
+    gn = _pad_to(gneg, (1, blk, blk))
+    out = _xbar.crossbar_mvm_batched(vp, gp, gn, g0=g0, dac_bits=dac_bits,
+                                     adc_bits=adc_bits, fullscale=fullscale,
+                                     interpret=interpret)
+    return out[:, :b, :r]
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def schur_update(a4, a3, w, *, interpret: bool | None = None):
     """Fused A4 - A3 @ W; see kernels/schur_gemm.py.  Any shapes; pads."""

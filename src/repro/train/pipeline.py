@@ -36,7 +36,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro: jnp.ndarray,
       elsewhere - callers psum or slice).
     """
     s_idx = jax.lax.axis_index(axis_name)
-    n_stages = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size only exists in newer jax; psum(1) is the portable way
+    # to read a mapped axis size.
+    n_stages = jax.lax.psum(1, axis_name)
     m = x_micro.shape[0]
     n_ticks = m + n_stages - 1
     fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import blockamc, analog
 from repro.core.analog import AnalogConfig
@@ -30,7 +30,11 @@ def test_ideal_exact(stages):
     assert float(relative_error(x_ref, x)) < 1e-4
 
 
-@pytest.mark.parametrize("n", [7, 13, 65, 100])
+@pytest.mark.parametrize("n", [
+    7, 13,
+    pytest.param(65, marks=pytest.mark.slow),
+    pytest.param(100, marks=pytest.mark.slow),
+])
 def test_odd_sizes(n):
     """Paper: odd n partitions with A1 of size (n+1)/2."""
     a, b, x_ref = _solve_refs(n)
@@ -103,6 +107,7 @@ def test_required_stages():
     assert blockamc.required_stages(257, 256) == 1
 
 
+@pytest.mark.slow
 def test_variation_block_beats_original():
     """Paper Fig. 7 headline: BlockAMC accuracy >= original AMC (medians)."""
     n = 128

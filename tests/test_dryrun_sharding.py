@@ -9,6 +9,10 @@ import sys
 
 import pytest
 
+# Production-mesh compiles and multi-host dry runs: the tier-1 'sharding'
+# slow set (satellite of the level-scheduled-executor PR).
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

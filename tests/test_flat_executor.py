@@ -1,0 +1,147 @@
+"""Flat level-scheduled executor vs the recursive reference.
+
+The contract (see TESTING.md): `compile_plan` is a pure restructuring of a
+SolvePlan, so `execute_flat` computes with *identical* programmed arrays and
+must match `_exec_inv`'s cascade to float tolerance for every cfg - and
+bit-for-bit on the CPU backend, where both executors lower to the same
+LAPACK calls in the same order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+
+KEY = jax.random.PRNGKey(3)
+KA, KB, KN = jax.random.split(KEY, 3)
+
+CASES = [
+    # (n, stages, cfg)
+    (8, 0, AnalogConfig(array_size=8)),
+    (16, 1, AnalogConfig(array_size=8)),
+    (17, 1, AnalogConfig(array_size=16,
+                         nonideal=NonidealConfig(sigma=0.05))),
+    (32, 2, AnalogConfig(array_size=8,
+                         nonideal=NonidealConfig(sigma=0.05))),
+    (33, 2, AnalogConfig(array_size=16, nonideal=NonidealConfig(sigma=0.02)),
+     ),
+    (32, 3, AnalogConfig(array_size=4)),
+    (16, 1, AnalogConfig(array_size=8, opa_gain=1e4)),
+    (16, 1, AnalogConfig(array_size=8, dac_bits=8, adc_bits=8)),
+    (24, 1, AnalogConfig(array_size=8,
+                         nonideal=NonidealConfig(sigma=0.05, r_wire=1.0))),
+]
+
+
+def _pair(n, stages, cfg):
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    plan = blockamc.build_plan(a, KN, cfg, stages=stages)
+    return plan, b
+
+
+@pytest.mark.parametrize("n,stages,cfg", CASES)
+def test_flat_matches_recursive(n, stages, cfg):
+    plan, b = _pair(n, stages, cfg)
+    x_rec = blockamc.execute(plan, b, cfg)
+    x_flat = blockamc.execute_flat(blockamc.compile_plan(plan), b, cfg)
+    if jax.default_backend() == "cpu":
+        # same arrays, same op order, same LAPACK -> bit-for-bit
+        np.testing.assert_array_equal(np.asarray(x_rec), np.asarray(x_flat))
+    else:
+        np.testing.assert_allclose(np.asarray(x_rec), np.asarray(x_flat),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_flat_multi_rhs_matches_per_column(k):
+    """(n, k) right-hand sides == k independent recursive solves."""
+    n, stages = 32, 2
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    a = wishart(KA, n)
+    bs = jax.random.normal(KB, (n, k))
+    plan = blockamc.build_plan(a, KN, cfg, stages=stages)
+    xs_flat = blockamc.execute_flat(blockamc.compile_plan(plan), bs, cfg)
+    assert xs_flat.shape == (n, k)
+    for j in range(k):
+        x_rec = blockamc.execute(plan, bs[:, j], cfg)
+        np.testing.assert_allclose(np.asarray(xs_flat[:, j]),
+                                   np.asarray(x_rec), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n_keys", [
+    1, 4,
+    pytest.param(16, marks=pytest.mark.slow),
+])
+def test_solve_batched_matches_vmapped_solve(n_keys):
+    n, stages = 32, 1
+    cfg = AnalogConfig(array_size=16, nonideal=NonidealConfig(sigma=0.05))
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    keys = jax.random.split(KN, n_keys)
+    xs_b = blockamc.solve_batched(a, b, keys, cfg, stages=stages)
+    xs_v = jax.vmap(lambda k: blockamc.solve(a, b, k, cfg, stages=stages))(
+        keys)
+    assert xs_b.shape == (n_keys, n)
+    np.testing.assert_allclose(np.asarray(xs_b), np.asarray(xs_v),
+                               rtol=1e-4, atol=1e-5)
+    # independent noise draws differ across keys
+    if n_keys > 1:
+        assert float(jnp.std(xs_b, axis=0).max()) > 0.0
+
+
+def test_solve_original_batched_matches():
+    n = 24
+    cfg = AnalogConfig(nonideal=NonidealConfig(sigma=0.05))
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    keys = jax.random.split(KN, 4)
+    xs_b = blockamc.solve_original_batched(a, b, keys, cfg)
+    xs_v = jax.vmap(lambda k: blockamc.solve_original(a, b, k, cfg))(keys)
+    np.testing.assert_allclose(np.asarray(xs_b), np.asarray(xs_v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fig8_structure_16_arrays_of_64():
+    """Two-stage 256^2 compiles to 16 physical arrays of 64x64 (Fig. 8)."""
+    a = wishart(KA, 256)
+    cfg = AnalogConfig(array_size=64)
+    fplan = blockamc.build_flat_plan(a, KN, cfg, stages=2)
+    assert fplan.num_arrays == 16
+    # all arrays are 64x64, bucketed by cascade depth
+    for grid, (depth, shape) in zip(fplan.inv_stacks, fplan.inv_keys):
+        assert shape == (64, 64) and depth == 2
+    assert sum(g.shape[-3] for g in fplan.inv_stacks) == 4
+    for grid, (depth, shape) in zip(fplan.mvm_stacks, fplan.mvm_keys):
+        assert shape == (64, 64)
+    assert sum(g.shape[-3] for g in fplan.mvm_stacks) == 12
+
+
+def test_schedule_dedupes_reused_arrays():
+    """A1 serves cascade steps 1 and 5 but is programmed (stacked) once."""
+    a = wishart(KA, 32)
+    cfg = AnalogConfig(array_size=16)
+    fplan = blockamc.build_flat_plan(a, KN, cfg, stages=2)
+    inv_levels = [i for i in fplan.schedule if i[0] == "inv"]
+    assert len(inv_levels) == 9                   # 3^stages INV applications
+    distinct = {(i[1], i[2]) for i in inv_levels}
+    assert len(distinct) == 4                     # 2^stages programmed leaves
+    assert fplan.num_levels == len(fplan.schedule)
+
+
+def test_flat_plan_jit_and_vmap():
+    """FlatPlan is a pytree: jits as a carried constant and vmaps over keys."""
+    n = 16
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    keys = jax.random.split(KN, 3)
+    fplans = jax.vmap(lambda k: blockamc.build_flat_plan(a, k, cfg, 1))(keys)
+    f = jax.jit(lambda fp, b: blockamc.execute_flat(fp, b, cfg))
+    xs = jax.vmap(lambda fp: f(fp, b))(fplans)
+    assert xs.shape == (3, n)
+    assert bool(jnp.all(jnp.isfinite(xs)))

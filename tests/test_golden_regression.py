@@ -1,0 +1,57 @@
+"""Golden regression tests: ideal-config BlockAMC == numerical solve.
+
+With ideal interfaces (dac_bits=adc_bits=None), zero device noise and ideal
+OPAs - the seed defaults of AnalogConfig - every BlockAMC cascade must
+reproduce jnp.linalg.solve to float tolerance, for any partitioning depth
+and for odd sizes (the paper's (n+1)/2 split).  Runs both executors so the
+recursive reference and the flat level-scheduled path are pinned to the
+same golden.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.metrics import relative_error
+from repro.data.matrices import random_rhs, wishart
+
+KEY = jax.random.PRNGKey(7)
+KA, KB, KN = jax.random.split(KEY, 3)
+
+IDEAL = AnalogConfig(array_size=8)   # dac/adc None, sigma 0, ideal OPA
+
+
+def _problem(n):
+    a = wishart(KA, n)
+    b = random_rhs(KB, n)
+    return a, b, jnp.linalg.solve(a, b)
+
+
+@pytest.mark.parametrize("executor", ["recursive", "flat"])
+@pytest.mark.parametrize("stages", [0, 1, 2])
+@pytest.mark.parametrize("n", [8, 17, 64])
+def test_ideal_matches_linalg_solve(n, stages, executor):
+    """n=17 exercises the odd split (A1 of size 9, then 5/4 at depth 2)."""
+    a, b, x_ref = _problem(n)
+    plan = blockamc.build_plan(a, KN, IDEAL, stages=stages)
+    if executor == "recursive":
+        x = blockamc.execute(plan, b, IDEAL)
+    else:
+        x = blockamc.execute_flat(blockamc.compile_plan(plan), b, IDEAL)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+@pytest.mark.parametrize("n", [8, 17, 64])
+def test_ideal_original_amc_matches(n):
+    a, b, x_ref = _problem(n)
+    x = blockamc.solve_original(a, b, KN, IDEAL)
+    assert float(relative_error(x_ref, x)) < 1e-4
+
+
+def test_odd_split_point():
+    """Paper: odd n partitions with A1 of size (n+1)/2."""
+    a, _, _ = _problem(17)
+    plan = blockamc.build_plan(a, KN, IDEAL, stages=1)
+    assert plan.root.m == 9
+    assert plan.root.inv1.n == 9 and plan.root.inv4s.n == 8

@@ -54,6 +54,7 @@ def test_iterations_to_tol_fuel_bound():
 
 # ----------------------------- distributed --------------------------------
 
+@pytest.mark.slow
 def test_distributed_matches_sequential_ideal():
     n = 128
     a = wishart(KA, n)

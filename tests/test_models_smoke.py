@@ -40,6 +40,7 @@ def test_forward_shapes_finite(arch):
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.slow
 def test_train_step(arch):
     cfg = reduce_cfg(get_config(arch))
     run = RunConfig(model=cfg, mode="train", seq_len=S, global_batch=B,

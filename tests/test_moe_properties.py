@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import moe as moe_mod
@@ -47,6 +47,7 @@ def test_moe_matches_dense_expert_reference():
                                np.asarray(ref), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_moe_group_count_invariance_no_drops():
     """Output is independent of the dp_groups hint when capacity is ample."""
     cfg = _moe_cfg(capacity_factor=16.0)   # ample: no drops at any g

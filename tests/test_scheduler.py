@@ -24,6 +24,7 @@ def _static_reference(cfg, params, prompt, max_new, max_len):
     return [int(t) for t in np.asarray(engine.generate(toks, max_new))[0]]
 
 
+@pytest.mark.slow
 def test_continuous_matches_static_per_request(setup):
     """Each request served via slot reuse == the same request served alone."""
     cfg, params = setup

@@ -33,6 +33,7 @@ def _decode_all(params, cfg, tokens, cache_len):
     "recurrentgemma-2b",    # RG-LRU assoc-scan vs recurrent + local attn
     "phi3.5-moe-42b-a6.6b", # MoE routing in decode
 ])
+@pytest.mark.slow
 def test_decode_matches_forward(arch):
     cfg = reduce_cfg(get_config(arch))
     if cfg.family == "ssm":
@@ -50,6 +51,7 @@ def test_decode_matches_forward(arch):
         np.asarray(logits_fwd, dtype=np.float32), rtol=2e-2, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_prefill_matches_decode_continuation(tiny_dense):
     """prefill(prompt) then decode must equal decoding token by token."""
     cfg = tiny_dense
@@ -76,6 +78,7 @@ def test_prefill_matches_decode_continuation(tiny_dense):
                                rtol=2e-2, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer():
     """RecurrentGemma local attention: ring-buffer decode == windowed fwd."""
     cfg = reduce_cfg(get_config("recurrentgemma-2b"), local_window=4)

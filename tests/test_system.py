@@ -8,6 +8,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig
@@ -39,6 +40,7 @@ def test_paper_end_to_end_solver_flow():
     assert int(it_seed) <= int(it_zero)
 
 
+@pytest.mark.slow
 def test_lm_end_to_end_train_ckpt_serve(tmp_path):
     cfg = reduce_cfg(get_config("glm4-9b"))
     run = RunConfig(model=cfg, mode="train", seq_len=32, global_batch=4,

@@ -32,6 +32,7 @@ def test_loss_decreases(tiny_dense):
     assert last5 < first5 - 0.1, (first5, last5)
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(tiny_dense):
     """4 microbatches must produce (nearly) the same update as 1 big batch."""
     cfg = tiny_dense
@@ -71,6 +72,7 @@ def test_checkpoint_atomicity(tiny_dense, tmp_path):
     assert latest_step(str(tmp_path)) == 1
 
 
+@pytest.mark.slow
 def test_trainer_resume(tiny_dense, tmp_path):
     """Kill after N steps; a new Trainer resumes from the checkpoint."""
     run = _run_cfg(tiny_dense)
