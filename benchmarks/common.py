@@ -68,13 +68,16 @@ def mc_solutions_recursive(a, b, keys, cfg: AnalogConfig, solver: str,
 
 
 def mc_errors(family: str, n: int, cfg: AnalogConfig, solver: str,
-              n_sims: int = N_SIMS_PAPER, stages=None, seed: int = 0,
+              n_sims=None, stages=None, seed: int = 0,
               batched: bool = True) -> np.ndarray:
     """Relative errors over `n_sims` independent device-noise draws.
 
-    batched=True (default) runs every seed in one level-scheduled batched
-    solve; batched=False keeps the sequential recursive walk per seed.
+    n_sims=None reads N_SIMS_PAPER at call time, so run.py's fast/smoke
+    overrides of the module global take effect.  batched=True (default)
+    runs every seed in one level-scheduled batched solve; batched=False
+    keeps the sequential recursive walk per seed.
     """
+    n_sims = N_SIMS_PAPER if n_sims is None else n_sims
     a, b, x_ref, keys = _mc_problem(family, n, n_sims, seed)
     run = mc_solutions if batched else mc_solutions_recursive
     xs = run(a, b, keys, cfg, solver, stages=stages)

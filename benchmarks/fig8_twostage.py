@@ -59,11 +59,16 @@ def main():
     rows = run()
     st = structure_check()
     save_json("fig8_twostage", {"rows": rows, "structure": st})
-    r256 = next(r for r in rows if r["n"] == 256)
-    csv_row("fig8_twostage_n256", 0.0,
-            f"two_stage={r256['two_stage_median']:.3f};"
-            f"orig={r256['orig_median']:.3f};arrays={st['n_arrays']};"
-            f"all64={st['all_64']}")
+    # headline row: the paper's Fig. 8 n=256 config when present (paper and
+    # fast mode), else the largest size run (--smoke); the structure fields
+    # describe the 256x256 partitioning, so only the n=256 row carries them
+    top = next((r for r in rows if r["n"] == 256),
+               max(rows, key=lambda r: r["n"]))
+    derived = (f"two_stage={top['two_stage_median']:.3f};"
+               f"orig={top['orig_median']:.3f}")
+    if top["n"] == 256:
+        derived += f";arrays={st['n_arrays']};all64={st['all_64']}"
+    csv_row(f"fig8_twostage_n{top['n']}", 0.0, derived)
     return rows
 
 

@@ -9,17 +9,24 @@ touched per call.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (csv_row, mc_solutions, mc_solutions_recursive,
                                save_json, timed, _mc_problem)
+from repro.core import blockamc
 from repro.core.analog import AnalogConfig
 from repro.core.nonideal import NonidealConfig
 from repro.kernels import ops, ref
 
 G0 = 100e-6
+
+# CI smoke mode (run.py --smoke): smallest configs only, so the job finishes
+# in well under a minute while still exercising every bench code path and
+# emitting the kernel_bench.json perf-trajectory artifact.
+SMOKE = False
 
 
 def mc_path_bench(out, n_sims: int = 40):
@@ -30,7 +37,7 @@ def mc_path_bench(out, n_sims: int = 40):
     (e.g. 16x 64x64 for the 256^2 two-stage solve); at large leaf sizes a
     single LU already saturates the core and the two paths converge.
     """
-    for n in (64, 256):
+    for n in ((64,) if SMOKE else (64, 256)):
         stages = 2
         cfg = AnalogConfig(array_size=n // 4,
                            nonideal=NonidealConfig(sigma=0.05))
@@ -49,10 +56,82 @@ def mc_path_bench(out, n_sims: int = 40):
                            "speedup": speedup}
 
 
+def program_once_bench(out, n: int = 256):
+    """Program-once / solve-many amortization (paper Section III cost model).
+
+    Fig. 8 two-stage config (n=256 -> 16 arrays of 64x64): one matrix is
+    programmed and finalized once (`ProgrammedSolver`), then streams of
+    right-hand sides are solved at marginal cost.  The baseline is per-call
+    `execute_flat`, which re-pays the per-solve programming-time work
+    (re-factorizes every INV bucket, re-derives every MVM tile operator)
+    on every call - one call per arriving rhs, exactly what a serving loop
+    without a programmed handle would do.  Reported per rhs count k:
+
+      flat_percall_us   one execute_flat call with the (n, k) batch
+      marginal_us       one ProgrammedSolver.solve_many with the same batch
+      speedup_batch     like-for-like: flat_percall_us / marginal_us
+      speedup_stream    serving: k per-rhs execute_flat calls vs one fused
+                        solve_many - the headline amortization number
+
+    Run for the paper's device-variation config and the full non-ideality
+    config (+1 ohm wire model, where per-call operator re-derivation costs
+    two n^2-matmuls per array side and finalization wins most).
+    """
+    rhs_counts = (1, 8) if SMOKE else (1, 8, 64)
+    stages = 2
+    for cold_start, (tag, ni) in enumerate((
+            ("sigma", NonidealConfig(sigma=0.05)),
+            ("sigma_wire", NonidealConfig(sigma=0.05, r_wire=1.0)))):
+        cfg = AnalogConfig(array_size=n // 4, nonideal=ni)
+        a, b, _, _ = _mc_problem("wishart", n, 1, seed=0)
+
+        # time-to-first-solve = plan build + finalize + jit + first solve
+        t0 = time.perf_counter()
+        fplan = blockamc.build_flat_plan(a, jax.random.PRNGKey(7), cfg,
+                                         stages=stages)
+        solver = blockamc.ProgrammedSolver.from_plan(fplan, cfg)
+        jax.block_until_ready(solver.solve(b))
+        ttfs_us = (time.perf_counter() - t0) * 1e6
+
+        flat_fn = jax.jit(lambda fp, v: blockamc.execute_flat(fp, v, cfg))
+
+        # Only the first config's ttfs is a true cold start; later ones
+        # reuse jax compile/op caches warmed by earlier configs (same
+        # shapes), so their programming cost reads low - flagged in the
+        # artifact rather than paid for with per-config subprocesses.
+        res = {"time_to_first_solve_us": ttfs_us,
+               "cold_start": cold_start == 0, "rhs": {}}
+        us_flat_1 = timed(flat_fn, fplan, b)
+        for k in rhs_counts:
+            bs = b if k == 1 else jax.random.normal(jax.random.PRNGKey(8),
+                                                    (n, k))
+            us_flat = us_flat_1 if k == 1 else timed(flat_fn, fplan, bs)
+            us_marginal = timed(
+                (lambda v: solver.solve(v)) if k == 1
+                else (lambda v: solver.solve_many(v)), bs)
+            res["rhs"][k] = {
+                "flat_percall_us": us_flat,
+                "marginal_us": us_marginal,
+                "speedup_batch": us_flat / us_marginal,
+                "speedup_stream": k * us_flat_1 / us_marginal,
+            }
+            csv_row(f"program_once_{tag}_n{n}_s{stages}_k{k}", us_marginal,
+                    f"flat={us_flat:.1f}us;batch={us_flat / us_marginal:.2f}x;"
+                    f"stream={k * us_flat_1 / us_marginal:.2f}x;"
+                    f"ttfs={ttfs_us:.0f}us")
+        # Headline number at the acceptance config: >= 8 streamed rhs.
+        res["speedup"] = res["rhs"][8]["speedup_stream"]
+        res["amortization"] = ttfs_us / res["rhs"][8]["marginal_us"]
+        out[f"program_once_{tag}_n{n}"] = res
+
+
 def main():
     out = {}
-    mc_path_bench(out)
-    for b, r, c in ((256, 512, 512), (512, 1024, 1024)):
+    program_once_bench(out, n=128 if SMOKE else 256)
+    mc_path_bench(out, n_sims=4 if SMOKE else 40)
+    xbar_shapes = (((128, 256, 256),) if SMOKE
+                   else ((256, 512, 512), (512, 1024, 1024)))
+    for b, r, c in xbar_shapes:
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
         v = jax.random.uniform(k1, (b, c), minval=-1, maxval=1)
         gp = jax.random.uniform(k2, (r, c), maxval=G0)
@@ -67,7 +146,9 @@ def main():
     # Leading-dim batched entry point: one (L, R, C) shape-bucket stack of
     # the flat executor driven in a single call (oracle path timed; the
     # Pallas kernel is parity-checked in tests/test_kernels.py).
-    for l, b, r, c in ((16, 64, 64, 64), (16, 128, 128, 128)):
+    batched_shapes = (((4, 64, 64, 64),) if SMOKE
+                      else ((16, 64, 64, 64), (16, 128, 128, 128)))
+    for l, b, r, c in batched_shapes:
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
         v = jax.random.uniform(k1, (l, b, c), minval=-1, maxval=1)
         gp = jax.random.uniform(k2, (l, r, c), maxval=G0)
@@ -80,7 +161,7 @@ def main():
                 f"GB={gb:.3f}")
         out[f"crossbar_batched_{l}x{b}x{r}x{c}"] = us
 
-    for n in (512, 1024):
+    for n in ((256,) if SMOKE else (512, 1024)):
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
         a4 = jax.random.normal(k1, (n, n))
         a3 = jax.random.normal(k2, (n, n))

@@ -34,6 +34,8 @@ def main() -> None:
                     help="full 40-sim protocol up to 512x512")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig6,fig10")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: tiniest configs, <1 min per suite")
     args = ap.parse_args()
 
     if not args.paper:
@@ -45,6 +47,18 @@ def main() -> None:
         fig8_twostage.SIZES = (64, 128, 256)
         fig9_interconnect.N_SIMS_PAPER = 8
         fig9_interconnect.SIZES = (16, 32, 64, 128)
+        fig6_accuracy.SIZES_PAPER = common.SIZES_PAPER
+
+    if args.smoke:            # after fast-mode defaults: smoke tightens them
+        kernel_bench.SMOKE = True
+        common.N_SIMS_PAPER = 4
+        common.SIZES_PAPER = (8, 16, 32, 64)
+        fig7_variation.N_SIMS_PAPER = 4
+        fig7_variation.SIZES_PAPER = common.SIZES_PAPER
+        fig8_twostage.N_SIMS_PAPER = 4
+        fig8_twostage.SIZES = (64,)
+        fig9_interconnect.N_SIMS_PAPER = 4
+        fig9_interconnect.SIZES = (16, 32)
         fig6_accuracy.SIZES_PAPER = common.SIZES_PAPER
 
     suites = {

@@ -4,5 +4,7 @@ from repro.core.nonideal import (  # noqa: F401
     NonidealConfig, IDEAL, PAPER_VARIATION, PAPER_FULL)
 from repro.core.blockamc import (  # noqa: F401
     build_plan, build_original_plan, execute, solve, solve_original,
-    required_stages)
+    required_stages, partition_system, program_system, finalize,
+    execute_finalized, ProgrammedSolver, solve_batched,
+    solve_batched_sharded)
 from repro.core.metrics import relative_error, l2_relative_error  # noqa: F401

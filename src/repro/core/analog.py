@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import nonideal
 from repro.core.nonideal import NonidealConfig
+from repro.core.quantization import quantize  # noqa: F401  (canonical home)
 
 G0_PAPER = 100e-6  # unit conductance, 100 uS
 
@@ -126,16 +127,6 @@ def map_matrix(a_block: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
 # ---------------------------------------------------------------------------
 # Converter interfaces
 # ---------------------------------------------------------------------------
-
-def quantize(v: jnp.ndarray, bits: Optional[int], fullscale: float) -> jnp.ndarray:
-    """Uniform mid-rise quantiser over [-fullscale, +fullscale]; clips."""
-    if bits is None:
-        return v
-    levels = 2 ** bits - 1
-    step = 2.0 * fullscale / levels
-    v = jnp.clip(v, -fullscale, fullscale)
-    return jnp.round(v / step) * step
-
 
 def dac(v: jnp.ndarray, cfg: AnalogConfig) -> jnp.ndarray:
     return quantize(v, cfg.dac_bits, cfg.v_fullscale)

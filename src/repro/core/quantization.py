@@ -1,0 +1,28 @@
+"""The uniform converter quantiser - single source of truth.
+
+Every DAC/ADC in the repo models the same converter: a uniform mid-rise
+quantiser over [-fullscale, +fullscale] with clipping (paper Fig. 3-4
+include 8-bit-class converters).  The circuit model (core/analog.py), the
+Pallas kernel (kernels/crossbar_mvm.py - the function is traced inside the
+kernel body, so it must stay pure jnp) and the jnp oracles (kernels/ref.py)
+all import this one definition; a parity test pins them together.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def quantize(v: jnp.ndarray, bits: Optional[int],
+             fullscale: float) -> jnp.ndarray:
+    """Uniform mid-rise quantiser over [-fullscale, +fullscale]; clips.
+
+    bits=None models an ideal converter (identity).
+    """
+    if bits is None:
+        return v
+    levels = 2 ** bits - 1
+    step = 2.0 * fullscale / levels
+    v = jnp.clip(v, -fullscale, fullscale)
+    return jnp.round(v / step) * step

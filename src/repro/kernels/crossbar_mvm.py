@@ -28,15 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _quantize(v, bits: int | None, fullscale: float):
-    """Uniform mid-rise quantiser over [-fs, +fs]; None = ideal (no-op)."""
-    if bits is None:
-        return v
-    levels = 2 ** bits - 1
-    step = 2.0 * fullscale / levels
-    v = jnp.clip(v, -fullscale, fullscale)
-    return jnp.round(v / step) * step
+# The one converter model (pure jnp, so it traces inside the kernel body).
+from repro.core.quantization import quantize as _quantize
 
 
 def _crossbar_mvm_kernel(v_ref, gpos_ref, gneg_ref, out_ref, *,

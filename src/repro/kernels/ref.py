@@ -3,14 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-
-def _quantize(v, bits, fullscale):
-    if bits is None:
-        return v
-    levels = 2 ** bits - 1
-    step = 2.0 * fullscale / levels
-    v = jnp.clip(v, -fullscale, fullscale)
-    return jnp.round(v / step) * step
+from repro.core.quantization import quantize as _quantize
 
 
 def crossbar_mvm_ref(v, gpos, gneg, *, g0, dac_bits=None, adc_bits=None,

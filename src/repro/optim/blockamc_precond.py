@@ -90,15 +90,14 @@ class BlockAMCPrecond:
         """One matrix inverse - the BlockAMC primitive (digital or analog)."""
         if not self.use_analog:
             return block_inv(a, self.leaf_size)
-        # analog path: column-by-column BlockAMC solve + digital refinement
-        plan = blockamc.build_plan(a, key, self.analog_cfg)
-
-        def solve_col(b):
-            x0 = blockamc.execute(plan, b, self.analog_cfg)
-            return hybrid.cg_refine(a, b, x0, self.refine_iters)
-
-        return jax.vmap(solve_col, in_axes=1, out_axes=1)(
-            jnp.eye(a.shape[0], dtype=jnp.float32))
+        # analog path: program the matrix once, solve all n identity columns
+        # in one fused multi-RHS call, then refine digitally per column.
+        solver = blockamc.ProgrammedSolver.program(a, key, self.analog_cfg)
+        eye = jnp.eye(a.shape[0], dtype=jnp.float32)
+        x0 = solver.solve_many(eye)
+        return jax.vmap(
+            lambda b, x: hybrid.cg_refine(a, b, x, self.refine_iters),
+            in_axes=1, out_axes=1)(eye, x0)
 
     def _invert(self, gram: jnp.ndarray, key) -> jnp.ndarray:
         """(G + lambda I)^-1/2 via Denman-Beavers (inverse-only iteration)."""

@@ -1,0 +1,134 @@
+"""Linear-system serving: program a matrix once, stream right-hand sides.
+
+The ROADMAP serving scenario for the paper's cost model (programming the
+arrays is the expensive one-time step; every subsequent solve is nearly
+free): a registry of `ProgrammedSolver` handles keyed by matrix id, plus a
+per-matrix request queue so right-hand sides that arrive between flushes are
+solved in one fused `solve_many` call instead of one cascade walk each.
+
+Deliberately synchronous and small - the batching discipline and the
+program/solve cost split are the point; transport and scheduling live a
+layer up (cf. serve/engine.py for the LM analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.core.blockamc import ProgrammedSolver
+
+
+@dataclasses.dataclass
+class MatrixStats:
+    """Per-programmed-matrix serving counters."""
+    program_time_s: float        # time-to-first-solve cost, paid once
+    solve_calls: int = 0         # fused solve invocations
+    rhs_served: int = 0          # individual right-hand sides solved
+
+
+class SolverService:
+    """Program-once / solve-many front end over `ProgrammedSolver`.
+
+    `program` pays the full programming cost (partition, Schur complements,
+    conductance mapping, operator finalization and the first jit) exactly
+    once per matrix; `solve` answers immediately; `submit` + `flush` batch
+    queued right-hand sides into one fused multi-RHS solve.
+    """
+
+    def __init__(self, cfg: AnalogConfig, stages: Optional[int] = None):
+        self.cfg = cfg
+        self.stages = stages
+        self._solvers: Dict[str, ProgrammedSolver] = {}
+        self._queues: Dict[str, List[jnp.ndarray]] = {}
+        self._stats: Dict[str, MatrixStats] = {}
+
+    def program(self, matrix_id: str, a: jnp.ndarray,
+                key: Optional[jax.Array] = None) -> ProgrammedSolver:
+        """Program matrix `a` under `matrix_id` (replaces any previous one).
+
+        Blocks until the first solve is hot (plan built, operators
+        finalized, executor compiled for the single-rhs and smallest-batch
+        shapes) so subsequent solves run at marginal cost - the measured
+        wall time is recorded as the matrix's programming cost.  Refuses to
+        replace a matrix that still has queued, unanswered right-hand sides
+        (flush first).
+        """
+        if self._queues.get(matrix_id):
+            raise RuntimeError(
+                f"matrix {matrix_id!r} has {len(self._queues[matrix_id])} "
+                f"pending rhs; flush before re-programming")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        t0 = time.perf_counter()
+        solver = ProgrammedSolver.program(a, key, self.cfg, self.stages)
+        # Warm the jitted executor (single-rhs and smallest flush batch) as
+        # part of programming time; flush pads to powers of two, so each
+        # further batch-shape compile happens at most once per doubling.
+        jax.block_until_ready(solver.solve(jnp.zeros((solver.n,),
+                                                     dtype=a.dtype)))
+        jax.block_until_ready(solver.solve(jnp.zeros((solver.n, 1),
+                                                     dtype=a.dtype)))
+        self._solvers[matrix_id] = solver
+        self._queues[matrix_id] = []
+        self._stats[matrix_id] = MatrixStats(
+            program_time_s=time.perf_counter() - t0)
+        return solver
+
+    def solver(self, matrix_id: str) -> ProgrammedSolver:
+        return self._solvers[matrix_id]
+
+    def stats(self, matrix_id: str) -> MatrixStats:
+        return self._stats[matrix_id]
+
+    @property
+    def matrix_ids(self):
+        return tuple(self._solvers)
+
+    def solve(self, matrix_id: str, b: jnp.ndarray) -> jnp.ndarray:
+        """Immediate solve of one (n,) rhs or an (n, k) batch."""
+        x = self._solvers[matrix_id].solve(b)
+        st = self._stats[matrix_id]
+        st.solve_calls += 1
+        st.rhs_served += 1 if b.ndim == 1 else b.shape[1]
+        return x
+
+    def submit(self, matrix_id: str, b: jnp.ndarray) -> int:
+        """Queue one (n,) rhs for the next flush; returns its queue slot."""
+        n = self._solvers[matrix_id].n
+        if b.shape != (n,):
+            raise ValueError(f"submit takes one ({n},) rhs, got {b.shape}")
+        q = self._queues[matrix_id]
+        q.append(b)
+        return len(q) - 1
+
+    def pending(self, matrix_id: str) -> int:
+        return len(self._queues[matrix_id])
+
+    def flush(self, matrix_id: str) -> jnp.ndarray:
+        """Solve all queued right-hand sides in one fused call.
+
+        Returns (n, k) solutions, column j answering the j-th submit since
+        the last flush; (n, 0) when the queue is empty.  The batch is padded
+        to the next power of two before solving (zero columns, sliced away)
+        so the jitted executor compiles at most one new shape per doubling
+        instead of one per distinct queue length.
+        """
+        q = self._queues[matrix_id]
+        solver = self._solvers[matrix_id]
+        if not q:
+            return jnp.zeros((solver.n, 0))
+        k = len(q)
+        k_pad = 1 << (k - 1).bit_length()
+        bs = jnp.stack(q, axis=1)
+        if k_pad > k:
+            bs = jnp.pad(bs, ((0, 0), (0, k_pad - k)))
+        xs = solver.solve_many(bs)[:, :k]
+        self._queues[matrix_id] = []    # only drop requests once answered
+        st = self._stats[matrix_id]
+        st.solve_calls += 1
+        st.rhs_served += k
+        return xs

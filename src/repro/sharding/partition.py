@@ -189,3 +189,18 @@ def batch_sharding(mesh: Mesh, model_cfg: ModelConfig,
                    run_cfg: RunConfig) -> NamedSharding:
     rules = activation_rules(mesh, model_cfg, run_cfg)
     return NamedSharding(mesh, rules["act_btd"])
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo solver sharding (blockamc.solve_batched_sharded)
+# ---------------------------------------------------------------------------
+
+def mc_solve_specs(axis_name: str = "mc"):
+    """shard_map specs for a Monte-Carlo BlockAMC sweep.
+
+    The partitioned system and right-hand sides are replicated on every
+    device; only the noise-key axis is sharded, so each device programs and
+    solves its own independent draws.  Returns (in_specs, out_specs) for
+    `(partitioned_system, b, keys) -> solutions`.
+    """
+    return (P(), P(), P(axis_name)), P(axis_name)

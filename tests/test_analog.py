@@ -115,3 +115,60 @@ def test_finite_gain_converges_to_ideal():
         if prev is not None:
             assert err < prev
         prev = err
+
+
+def test_quantizer_single_source_of_truth():
+    """The converter quantiser has one definition (core/quantization.py):
+    the circuit model, the Pallas kernel body and the jnp oracles must all
+    bind the same function - and it must behave identically through each
+    import path (the copy-paste-twin regression guard)."""
+    from repro.core import quantization
+    from repro.kernels import crossbar_mvm, ref
+    assert analog.quantize is quantization.quantize
+    assert crossbar_mvm._quantize is quantization.quantize
+    assert ref._quantize is quantization.quantize
+    v = random_rhs(KB, 128) * 1.5        # exercise clipping
+    for bits in (None, 4, 8):
+        np.testing.assert_array_equal(
+            np.asarray(analog.quantize(v, bits, 1.0)),
+            np.asarray(quantization.quantize(v, bits, 1.0)))
+
+
+@pytest.mark.parametrize("lead", [(6,), (2, 3), (5, 2, 3)])
+def test_tilegrid_a_eff_batched_wire_model(lead):
+    """TileGrid.a_eff with leading batch axes must equal per-pair
+    CrossbarPair.a_eff tile-for-tile under the first-order wire model
+    (the vmapped-reshape path the flat executor's stacks rely on)."""
+    s = 8
+    cfg = AnalogConfig(array_size=s,
+                       nonideal=analog.NonidealConfig(sigma=0.05, r_wire=1.0))
+    kp, kn = jax.random.split(KN)
+    gpos = jax.random.uniform(kp, lead + (s, s), maxval=cfg.g0)
+    gneg = jax.random.uniform(kn, lead + (s, s), maxval=cfg.g0)
+    grid = analog.TileGrid(gpos, gneg, jnp.float32(1.0), cfg.g0)
+    a_eff = grid.a_eff(cfg)
+    assert a_eff.shape == lead + (s, s)
+    flat_p = gpos.reshape((-1, s, s))
+    flat_n = gneg.reshape((-1, s, s))
+    flat_eff = a_eff.reshape((-1, s, s))
+    for i in range(flat_p.shape[0]):
+        pair = analog.CrossbarPair(flat_p[i], flat_n[i], jnp.float32(1.0),
+                                   cfg.g0)
+        np.testing.assert_allclose(np.asarray(flat_eff[i]),
+                                   np.asarray(pair.a_eff(cfg)),
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_tilegrid_a_eff_unbatched_matches_pair():
+    """No leading axes: TileGrid.a_eff takes the direct (non-vmapped) wire
+    path and must still equal CrossbarPair.a_eff exactly."""
+    s = 8
+    cfg = AnalogConfig(array_size=s,
+                       nonideal=analog.NonidealConfig(sigma=0.05, r_wire=1.0))
+    kp, kn = jax.random.split(KN)
+    gpos = jax.random.uniform(kp, (s, s), maxval=cfg.g0)
+    gneg = jax.random.uniform(kn, (s, s), maxval=cfg.g0)
+    grid = analog.TileGrid(gpos, gneg, jnp.float32(1.0), cfg.g0)
+    pair = analog.CrossbarPair(gpos, gneg, jnp.float32(1.0), cfg.g0)
+    np.testing.assert_array_equal(np.asarray(grid.a_eff(cfg)),
+                                  np.asarray(pair.a_eff(cfg)))
