@@ -1,0 +1,102 @@
+"""Diff two benchmark-artifact directories (nightly perf trajectory).
+
+    python benchmarks/diff_bench.py BASELINE_DIR CURRENT_DIR [--out diff.md]
+
+Flattens every `*.json` in both directories to dotted numeric paths and
+reports, per metric, the old value, new value and relative change; metrics
+whose |relative change| exceeds the threshold are flagged.  Report-only by
+design: nightly runs on shared CI runners are noisy, so the job uploads the
+diff for humans instead of failing the build (tier-1 correctness gating
+lives in the test suite, not here).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict
+
+
+def _flatten(obj, prefix="") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(_flatten(v, f"{prefix}[{i}]"))
+    elif isinstance(obj, bool):
+        out[prefix] = float(obj)
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def _load_dir(path: str) -> Dict[str, Dict[str, float]]:
+    out = {}
+    if not os.path.isdir(path):
+        return out
+    for name in sorted(os.listdir(path)):
+        if name.endswith(".json"):
+            try:
+                with open(os.path.join(path, name)) as f:
+                    out[name] = _flatten(json.load(f))
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"warning: skipping {name}: {e}", file=sys.stderr)
+    return out
+
+
+def diff(baseline_dir: str, current_dir: str, threshold: float = 0.10) -> str:
+    base = _load_dir(baseline_dir)
+    cur = _load_dir(current_dir)
+    lines = ["# Bench diff", "",
+             f"baseline: `{baseline_dir}`  current: `{current_dir}`", ""]
+    if not base:
+        lines.append("_no baseline artifacts (first nightly run?) - "
+                     "nothing to diff_")
+    for name in sorted(set(base) | set(cur)):
+        if name not in base:
+            lines.append(f"## {name}: NEW (no baseline)")
+            continue
+        if name not in cur:
+            lines.append(f"## {name}: MISSING from current run")
+            continue
+        b, c = base[name], cur[name]
+        flagged, changed = [], 0
+        for key in sorted(set(b) | set(c)):
+            if key not in b or key not in c:
+                flagged.append(f"- `{key}`: "
+                               f"{'added' if key not in b else 'removed'}")
+                continue
+            if b[key] == c[key]:
+                continue
+            changed += 1
+            rel = ((c[key] - b[key]) / abs(b[key])) if b[key] else float("inf")
+            if abs(rel) >= threshold:
+                flagged.append(f"- `{key}`: {b[key]:g} -> {c[key]:g} "
+                               f"({rel:+.1%})")
+        lines.append(f"## {name}: {changed} metric(s) changed, "
+                     f"{len(flagged)} flagged (>= {threshold:.0%})")
+        lines.extend(flagged)
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline_dir")
+    ap.add_argument("current_dir")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative change that gets flagged (default 10%%)")
+    ap.add_argument("--out", default=None, help="also write the report here")
+    args = ap.parse_args()
+    report = diff(args.baseline_dir, args.current_dir, args.threshold)
+    print(report)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(report)
+
+
+if __name__ == "__main__":
+    main()

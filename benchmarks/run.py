@@ -38,6 +38,8 @@ def main() -> None:
                     help="CI smoke mode: tiniest configs, <1 min per suite")
     args = ap.parse_args()
 
+    if args.paper:
+        hybrid_refinement.N = hybrid_refinement.N_PAPER
     if not args.paper:
         common.N_SIMS_PAPER = 8
         common.SIZES_PAPER = (8, 16, 32, 64, 128, 256)
@@ -51,6 +53,7 @@ def main() -> None:
 
     if args.smoke:            # after fast-mode defaults: smoke tightens them
         kernel_bench.SMOKE = True
+        hybrid_refinement.SMOKE = True
         common.N_SIMS_PAPER = 4
         common.SIZES_PAPER = (8, 16, 32, 64)
         fig7_variation.N_SIMS_PAPER = 4

@@ -208,10 +208,13 @@ jax.tree_util.register_dataclass(
 
 
 def _partition(a: jnp.ndarray, stages: int) -> Target:
-    if stages == 0:
+    n = a.shape[0]
+    if stages == 0 or n <= 1:
+        # a 1x1 block cannot be partitioned further: splitting it would
+        # produce zero-width A2/A3 and an empty Schur complement (i.e.
+        # physical arrays with no devices), so surplus stages stop here.
         return LeafTarget(a)
     # Paper: for odd n, A1 takes (n+1)/2; any square A1 works.
-    n = a.shape[0]
     m = -(-n // 2)
     a1, a2 = a[:m, :m], a[:m, m:]
     a3, a4 = a[m:, :m], a[m:, m:]

@@ -1,110 +1,13 @@
-"""Hybrid analog-digital solving: AMC seed + digital iterative refinement.
+"""Compatibility shim: the hybrid subsystem moved to `repro.hybrid`.
 
-The paper (Section IV) positions AMC output as "a seed solution (or
-equivalently a preconditioner) for digital computers, to speed up the
-convergence of iterative algorithms".  This module makes that executable:
-
-  * `richardson_refine` / `cg_refine`: classic iterations started from the
-    analog seed, in the digital domain (f32).
-  * `iterations_to_tol`: how many digital iterations the seed saves - the
-    metric that turns "BlockAMC is more accurate" into end-to-end value.
-
-All functions are jit/vmap-friendly (lax.while_loop with a fuel bound).
+`core/hybrid.py` began as a 110-line single-RHS sketch of the paper's
+Section IV positioning (AMC output as seed/preconditioner for digital
+iteration).  It is now a full subsystem - batched Krylov drivers, the
+`AnalogPreconditioner` operator adapter, fused/sharded refinement - living
+in `repro.hybrid`.  This module re-exports the whole public surface so
+existing imports (`from repro.core import hybrid`) keep working.
 """
-from __future__ import annotations
-
-from functools import partial
-from typing import Callable, Tuple
-
-import jax
-import jax.numpy as jnp
-
-
-def _residual_norm(a, b, x):
-    return jnp.linalg.norm(b - a @ x) / jnp.linalg.norm(b)
-
-
-@partial(jax.jit, static_argnames=("iters",))
-def richardson_refine(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
-                      iters: int, omega: float | None = None) -> jnp.ndarray:
-    """x_{k+1} = x_k + omega (b - A x_k); omega defaults to 1/||A||_inf."""
-    if omega is None:
-        omega_v = 1.0 / jnp.max(jnp.sum(jnp.abs(a), axis=1))
-    else:
-        omega_v = jnp.asarray(omega, a.dtype)
-
-    def body(x, _):
-        return x + omega_v * (b - a @ x), None
-
-    x, _ = jax.lax.scan(body, x0, None, length=iters)
-    return x
-
-
-@partial(jax.jit, static_argnames=("iters",))
-def cg_refine(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
-              iters: int) -> jnp.ndarray:
-    """Conjugate gradients from seed x0 (A SPD; Wishart qualifies)."""
-    r0 = b - a @ x0
-
-    def body(carry, _):
-        x, r, p, rs = carry
-        ap = a @ p
-        alpha = rs / (p @ ap + 1e-30)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rs_new = r @ r
-        beta = rs_new / (rs + 1e-30)
-        p = r + beta * p
-        return (x, r, p, rs_new), None
-
-    init = (x0, r0, r0, r0 @ r0)
-    (x, _, _, _), _ = jax.lax.scan(body, init, None, length=iters)
-    return x
-
-
-@partial(jax.jit, static_argnames=("method", "max_iters"))
-def iterations_to_tol(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
-                      tol: float = 1e-6, method: str = "cg",
-                      max_iters: int = 2000) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Run the iteration until ||b - Ax||/||b|| < tol; return (x, n_iters).
-
-    Fuel-bounded while_loop (jit-safe).  n_iters == max_iters means no
-    convergence within fuel.
-    """
-    b_norm = jnp.linalg.norm(b)
-
-    if method == "richardson":
-        omega_v = 1.0 / jnp.max(jnp.sum(jnp.abs(a), axis=1))
-
-        def step(state):
-            x, _, k = state
-            x = x + omega_v * (b - a @ x)
-            return x, jnp.linalg.norm(b - a @ x) / b_norm, k + 1
-
-        def cond(state):
-            _, res, k = state
-            return (res >= tol) & (k < max_iters)
-
-        x, _, k = jax.lax.while_loop(
-            cond, lambda s: step(s), (x0, _residual_norm(a, b, x0), jnp.int32(0)))
-        return x, k
-
-    # CG with explicit state
-    def cond(state):
-        _, r, _, _, k = state
-        return (jnp.linalg.norm(r) / b_norm >= tol) & (k < max_iters)
-
-    def step(state):
-        x, r, p, rs, k = state
-        ap = a @ p
-        alpha = rs / (p @ ap + 1e-30)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rs_new = r @ r
-        p = r + (rs_new / (rs + 1e-30)) * p
-        return x, r, p, rs_new, k + 1
-
-    r0 = b - a @ x0
-    x, _, _, _, k = jax.lax.while_loop(
-        cond, step, (x0, r0, r0, r0 @ r0, jnp.int32(0)))
-    return x, k
+from repro.hybrid import (  # noqa: F401
+    AnalogPreconditioner, KrylovResult, cg_refine, gmres, iterations_to_tol,
+    matvec_from_dense, pcg, richardson_refine, solve_refined,
+    solve_refined_batched, solve_refined_batched_sharded)

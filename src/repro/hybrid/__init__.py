@@ -1,0 +1,29 @@
+"""Hybrid analog-digital solving subsystem (paper Section IV).
+
+The paper positions the AMC output as "a seed solution (or equivalently a
+preconditioner) for digital computers, to speed up the convergence of
+iterative algorithms".  This package is that loop made production-shaped
+(cf. Le Gallo et al., mixed-precision in-memory computing; Shah et al.,
+hybrid digital-analog approximate-inverse preconditioning):
+
+  * `operators`  - LinearOperator-style adapters: `AnalogPreconditioner`
+    wraps a finalized BlockAMC plan (noisy, wire-modeled analog inverse)
+    as a batched digital-domain operator; `matvec_from_dense` adapts a
+    dense matrix to the drivers' leading-axis layout.
+  * `krylov`     - fully batched, jit/vmap-safe `pcg` and restarted
+    `gmres(m)` drivers: multi-RHS on leading axes, fuel-bounded
+    `lax.while_loop`s, per-RHS convergence masks.
+  * `refine`     - the fused analog-seed -> Krylov-refine path
+    (`solve_refined`) plus its Monte-Carlo batched and mesh-sharded forms.
+  * `classic`    - the original fixed-iteration refinement helpers
+    (`richardson_refine`, `cg_refine`, `iterations_to_tol`), kept for the
+    paper-figure benchmarks; `repro.core.hybrid` re-exports everything
+    here for backwards compatibility.
+"""
+from repro.hybrid.classic import (  # noqa: F401
+    cg_refine, iterations_to_tol, richardson_refine)
+from repro.hybrid.krylov import KrylovResult, gmres, pcg  # noqa: F401
+from repro.hybrid.operators import (  # noqa: F401
+    AnalogPreconditioner, matvec_from_dense)
+from repro.hybrid.refine import (  # noqa: F401
+    solve_refined, solve_refined_batched, solve_refined_batched_sharded)

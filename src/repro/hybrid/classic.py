@@ -1,0 +1,107 @@
+"""Classic fixed-iteration refinement from an analog seed.
+
+The original `core/hybrid.py` helpers: Richardson / CG iterations started
+from the analog seed, and `iterations_to_tol` - how many digital iterations
+the seed saves.  The batched production drivers live in
+`repro.hybrid.krylov`; these stay as the single-RHS reference used by the
+paper-figure benchmarks and as the simplest statement of the scheme.
+
+All functions are jit/vmap-friendly (lax.while_loop with a fuel bound).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _residual_norm(a, b, x):
+    return jnp.linalg.norm(b - a @ x) / jnp.linalg.norm(b)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def richardson_refine(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
+                      iters: int, omega: float | None = None) -> jnp.ndarray:
+    """x_{k+1} = x_k + omega (b - A x_k); omega defaults to 1/||A||_inf."""
+    if omega is None:
+        omega_v = 1.0 / jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    else:
+        omega_v = jnp.asarray(omega, a.dtype)
+
+    def body(x, _):
+        return x + omega_v * (b - a @ x), None
+
+    x, _ = jax.lax.scan(body, x0, None, length=iters)
+    return x
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def cg_refine(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
+              iters: int) -> jnp.ndarray:
+    """Conjugate gradients from seed x0 (A SPD; Wishart qualifies)."""
+    r0 = b - a @ x0
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        ap = a @ p
+        alpha = rs / (p @ ap + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        beta = rs_new / (rs + 1e-30)
+        p = r + beta * p
+        return (x, r, p, rs_new), None
+
+    init = (x0, r0, r0, r0 @ r0)
+    (x, _, _, _), _ = jax.lax.scan(body, init, None, length=iters)
+    return x
+
+
+@partial(jax.jit, static_argnames=("method", "max_iters"))
+def iterations_to_tol(a: jnp.ndarray, b: jnp.ndarray, x0: jnp.ndarray,
+                      tol: float = 1e-6, method: str = "cg",
+                      max_iters: int = 2000) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the iteration until ||b - Ax||/||b|| < tol; return (x, n_iters).
+
+    Fuel-bounded while_loop (jit-safe).  n_iters == max_iters means no
+    convergence within fuel.
+    """
+    b_norm = jnp.linalg.norm(b)
+
+    if method == "richardson":
+        omega_v = 1.0 / jnp.max(jnp.sum(jnp.abs(a), axis=1))
+
+        def step(state):
+            x, _, k = state
+            x = x + omega_v * (b - a @ x)
+            return x, jnp.linalg.norm(b - a @ x) / b_norm, k + 1
+
+        def cond(state):
+            _, res, k = state
+            return (res >= tol) & (k < max_iters)
+
+        x, _, k = jax.lax.while_loop(
+            cond, lambda s: step(s), (x0, _residual_norm(a, b, x0), jnp.int32(0)))
+        return x, k
+
+    # CG with explicit state
+    def cond(state):
+        _, r, _, _, k = state
+        return (jnp.linalg.norm(r) / b_norm >= tol) & (k < max_iters)
+
+    def step(state):
+        x, r, p, rs, k = state
+        ap = a @ p
+        alpha = rs / (p @ ap + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        p = r + (rs_new / (rs + 1e-30)) * p
+        return x, r, p, rs_new, k + 1
+
+    r0 = b - a @ x0
+    x, _, _, _, k = jax.lax.while_loop(
+        cond, step, (x0, r0, r0, r0 @ r0, jnp.int32(0)))
+    return x, k

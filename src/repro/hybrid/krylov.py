@@ -1,0 +1,214 @@
+"""Batched, jit/vmap-safe Krylov drivers over abstract linear operators.
+
+Layout contract: right-hand sides ride on *leading* axes - `b` is `(n,)`
+for one system or `(batch..., n)` for a multi-RHS batch - and operators
+(`matvec`, `precond`) are callables mapping `(..., n) -> (..., n)` over the
+trailing axis (see `repro.hybrid.operators`).  Everything is pure jnp over
+fuel-bounded `lax.while_loop`s, so the drivers jit, vmap (e.g. over
+Monte-Carlo noise keys of an analog preconditioner) and shard_map cleanly.
+
+Per-RHS convergence masks: each right-hand side carries its own `active`
+flag.  A converged column's state is frozen exactly (its step sizes are
+masked to zero and its search direction held), so streaming one easy and
+one hard system together costs the hard system nothing in accuracy and the
+easy system nothing in extra updates - and the batched result for a column
+matches a solo run of that column up to XLA's batched-matmul reduction
+order (float tolerance; documented in TESTING.md).
+
+Convergence is measured as ||b - A x|| <= tol * ||b|| per right-hand side.
+`iters` counts the iterations a column was active: exact per-column counts
+for `pcg`; restart-cycle granularity (multiples of `restart`) for `gmres`.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Operator = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class KrylovResult(NamedTuple):
+    """Per-RHS outcome of a batched Krylov solve (leading-axis layout)."""
+    x: jnp.ndarray          # (..., n) solutions
+    iters: jnp.ndarray      # (...,) int32 iterations while active
+    resnorm: jnp.ndarray    # (...,) final relative residual ||b-Ax||/||b||
+    converged: jnp.ndarray  # (...,) bool, reached tol within fuel
+
+
+def _dot(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(u * v, axis=-1)
+
+
+def _identity(v: jnp.ndarray) -> jnp.ndarray:
+    return v
+
+
+class _CGState(NamedTuple):
+    x: jnp.ndarray
+    r: jnp.ndarray
+    p: jnp.ndarray
+    rz: jnp.ndarray
+    r2: jnp.ndarray
+    k: jnp.ndarray
+    iters: jnp.ndarray
+    active: jnp.ndarray
+
+
+def pcg(matvec: Operator, b: jnp.ndarray, *, precond: Optional[Operator] = None,
+        x0: Optional[jnp.ndarray] = None, tol: float = 1e-10,
+        maxiter: int = 1000) -> KrylovResult:
+    """Batched preconditioned conjugate gradients (A SPD).
+
+    `matvec`/`precond` map `(..., n) -> (..., n)`; `b` is `(n,)` or
+    `(batch..., n)`.  The preconditioner must be (an approximation of) an
+    SPD inverse - e.g. `AnalogPreconditioner` over an SPD system.  Columns
+    whose residual is already below tol (including b == 0) never update.
+    """
+    mv_m = precond if precond is not None else _identity
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    tiny = jnp.asarray(jnp.finfo(b.dtype).tiny, b.dtype)
+    stop2 = (tol ** 2) * _dot(b, b)
+
+    r0 = b - matvec(x0)
+    z0 = mv_m(r0)
+    r2_0 = _dot(r0, r0)
+    active0 = r2_0 > stop2
+    init = _CGState(x=x0, r=r0, p=z0, rz=_dot(r0, z0), r2=r2_0,
+                    k=jnp.int32(0),
+                    iters=jnp.zeros(r2_0.shape, jnp.int32), active=active0)
+
+    def cond(s: _CGState):
+        return jnp.any(s.active) & (s.k < maxiter)
+
+    def body(s: _CGState) -> _CGState:
+        ap = matvec(s.p)
+        pap = _dot(s.p, ap)
+        alpha = jnp.where(s.active, s.rz / (pap + tiny), 0.0)
+        x = s.x + alpha[..., None] * s.p
+        r = s.r - alpha[..., None] * ap
+        z = mv_m(r)
+        rz_new = _dot(r, z)
+        beta = jnp.where(s.active, rz_new / (s.rz + tiny), 0.0)
+        # frozen columns keep their direction bit-identical (beta is 0 but
+        # z still differs; the where keeps their whole state untouched)
+        p = jnp.where(s.active[..., None], z + beta[..., None] * s.p, s.p)
+        r2 = _dot(r, r)
+        return _CGState(x=x, r=r, p=p,
+                        rz=jnp.where(s.active, rz_new, s.rz),
+                        r2=r2, k=s.k + 1,
+                        iters=s.iters + s.active.astype(jnp.int32),
+                        active=s.active & (r2 > stop2))
+
+    s = jax.lax.while_loop(cond, body, init)
+    b2 = _dot(b, b)
+    resnorm = jnp.sqrt(s.r2) / jnp.sqrt(jnp.where(b2 > 0, b2, 1.0))
+    return KrylovResult(x=s.x, iters=s.iters, resnorm=resnorm,
+                        converged=s.r2 <= stop2)
+
+
+class _GmresState(NamedTuple):
+    x: jnp.ndarray
+    r2: jnp.ndarray
+    k: jnp.ndarray
+    iters: jnp.ndarray
+    active: jnp.ndarray
+
+
+def gmres(matvec: Operator, b: jnp.ndarray, *,
+          precond: Optional[Operator] = None,
+          x0: Optional[jnp.ndarray] = None, tol: float = 1e-10,
+          restart: int = 32, maxiter: int = 1000) -> KrylovResult:
+    """Batched restarted GMRES(m) with right preconditioning (A square).
+
+    Solves `A M u = b, x = M u`: right preconditioning keeps the monitored
+    residual the *true* residual, so a noisy analog `M` changes only the
+    convergence rate, never the solution.  One cycle = `restart` Arnoldi
+    steps (twice-iterated classical Gram-Schmidt, batched over all leading
+    axes) followed by a batched QR least-squares update.  A cycle's update
+    is accepted per column only if it does not increase the residual
+    (restarted GMRES is monotone in exact arithmetic; the guard makes
+    happy-breakdown garbage inert), and columns that converge or stagnate
+    are masked out of further updates.
+    """
+    mv_m = precond if precond is not None else _identity
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    # honour the fuel bound exactly: a cycle never exceeds maxiter inner
+    # steps, and whole cycles are fitted under maxiter (round down, >= 1)
+    m = min(int(restart), int(maxiter))
+    n = b.shape[-1]
+    batch = b.shape[:-1]
+    dtype = b.dtype
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    n_cycles = max(int(maxiter) // m, 1)
+    b2 = _dot(b, b)
+    stop2 = (tol ** 2) * b2
+
+    def op(v):
+        return matvec(mv_m(v))
+
+    def cycle(x):
+        """One GMRES(m) cycle from x; returns the candidate update."""
+        r = b - matvec(x)
+        beta = jnp.sqrt(_dot(r, r))
+        v_basis = jnp.zeros(batch + (m + 1, n), dtype)
+        v_basis = v_basis.at[..., 0, :].set(r / (beta + tiny)[..., None])
+        h_mat = jnp.zeros(batch + (m + 1, m), dtype)
+
+        def arnoldi(j, carry):
+            v_b, h_m = carry
+            w = op(v_b[..., j, :])
+            mask = (jnp.arange(m + 1) <= j).astype(dtype)
+            # CGS2: two passes of classical Gram-Schmidt (batched; the
+            # second pass restores orthogonality CGS1 loses)
+            h1 = jnp.einsum("...in,...n->...i", v_b, w) * mask
+            w = w - jnp.einsum("...i,...in->...n", h1, v_b)
+            h2 = jnp.einsum("...in,...n->...i", v_b, w) * mask
+            w = w - jnp.einsum("...i,...in->...n", h2, v_b)
+            hcol = h1 + h2
+            wnorm = jnp.sqrt(_dot(w, w))
+            hcol = hcol.at[..., j + 1].set(wnorm)
+            v_b = v_b.at[..., j + 1, :].set(w / (wnorm + tiny)[..., None])
+            h_m = h_m.at[..., :, j].set(hcol)
+            return v_b, h_m
+
+        v_basis, h_mat = jax.lax.fori_loop(0, m, arnoldi, (v_basis, h_mat))
+        # least squares  min_y || beta e1 - H y ||  via batched reduced QR
+        e1 = jnp.zeros(batch + (m + 1,), dtype).at[..., 0].set(beta)
+        q_f, r_f = jnp.linalg.qr(h_mat)
+        rhs = jnp.einsum("...ij,...i->...j", q_f, e1)
+        # guard exactly-singular R (happy breakdown); the acceptance test
+        # below discards any garbage this lets through
+        diag = jnp.diagonal(r_f, axis1=-2, axis2=-1)
+        r_f = r_f + (jnp.abs(diag) < tiny)[..., None] * jnp.eye(m, dtype=dtype)
+        y = jax.scipy.linalg.solve_triangular(r_f, rhs, lower=False)
+        dx = jnp.einsum("...j,...jn->...n", y, v_basis[..., :m, :])
+        return x + mv_m(dx)
+
+    r0 = b - matvec(x0)
+    r2_0 = _dot(r0, r0)
+    init = _GmresState(x=x0, r2=r2_0, k=jnp.int32(0),
+                       iters=jnp.zeros(r2_0.shape, jnp.int32),
+                       active=r2_0 > stop2)
+
+    def cond(s: _GmresState):
+        return jnp.any(s.active) & (s.k < n_cycles)
+
+    def body(s: _GmresState) -> _GmresState:
+        x_new = cycle(s.x)
+        r_new = b - matvec(x_new)
+        r2_new = _dot(r_new, r_new)
+        take = s.active & (r2_new <= s.r2)
+        x = jnp.where(take[..., None], x_new, s.x)
+        r2 = jnp.where(take, r2_new, s.r2)
+        # stagnated columns (no residual decrease) stop burning cycles
+        progressed = take & (r2_new < s.r2)
+        return _GmresState(x=x, r2=r2, k=s.k + 1,
+                           iters=s.iters + s.active.astype(jnp.int32) * m,
+                           active=progressed & (r2 > stop2))
+
+    s = jax.lax.while_loop(cond, body, init)
+    resnorm = jnp.sqrt(s.r2) / jnp.sqrt(jnp.where(b2 > 0, b2, 1.0))
+    return KrylovResult(x=s.x, iters=s.iters, resnorm=resnorm,
+                        converged=s.r2 <= stop2)

@@ -1,0 +1,103 @@
+"""Linear-operator adapters bridging the analog solver into digital Krylov.
+
+Layout contract of the Krylov drivers (`repro.hybrid.krylov`): right-hand
+sides ride on *leading* axes - a vector is `(n,)`, a multi-RHS batch is
+`(..., n)` - and an operator is any callable mapping `(..., n) -> (..., n)`
+over the trailing axis.  This module provides the two operators the hybrid
+loop needs:
+
+  * `matvec_from_dense(a)` - the digital matrix-vector product `v -> A v`
+    in the drivers' layout (the exact, full-precision residual operator).
+  * `AnalogPreconditioner` - one programmed BlockAMC cascade (a
+    `FinalizedPlan`: noisy conductances, wire model, finite gain and
+    quantisers all folded in) applied as `M ~ A^-1`.  It is a registered
+    pytree, so it passes through jit/vmap/shard_map as an argument, and it
+    is *mixed precision*: inputs are cast down to the plan's compute dtype
+    (the analog substrate), outputs cast back up to the caller's dtype
+    (the digital iteration) - the Le Gallo et al. mixed-precision IMC
+    split.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.blockamc import FinalizedPlan
+
+
+def matvec_from_dense(a: jnp.ndarray) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """`v -> A v` over the trailing axis of `v` ((..., n) -> (..., n))."""
+    def matvec(v: jnp.ndarray) -> jnp.ndarray:
+        # (A v)_i = sum_j A_ij v_j for every leading batch index.
+        return v @ a.T
+
+    return matvec
+
+
+@jax.tree_util.register_pytree_node_class
+class AnalogPreconditioner:
+    """A programmed analog inverse as a batched digital-domain operator.
+
+    Wraps one `FinalizedPlan` (program-once form of a BlockAMC cascade) and
+    applies it to `(..., n)` inputs: one analog solve per trailing vector,
+    all leading axes batched through the finalized executor's multi-RHS
+    path.  Because the plan is finalized, every application is pure batched
+    `lu_solve`s / stacked matmuls - the marginal-cost analog solve the
+    paper's cost model promises, which is what makes it affordable *inside*
+    a Krylov iteration.
+    """
+
+    def __init__(self, fin: FinalizedPlan):
+        self.fin = fin
+
+    def tree_flatten(self):
+        return (self.fin,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @classmethod
+    def program(cls, a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
+                stages: Optional[int] = None) -> "AnalogPreconditioner":
+        """Full programming flow: partition, Schur, map + noise, finalize."""
+        fplan = blockamc.compile_plan(blockamc.build_plan(a, key, cfg, stages))
+        return cls(blockamc.finalize(fplan, cfg))
+
+    @classmethod
+    def from_solver(cls, solver: "blockamc.ProgrammedSolver"
+                    ) -> "AnalogPreconditioner":
+        """Share an already-programmed `ProgrammedSolver`'s finalized plan."""
+        return cls(solver.finalized)
+
+    @property
+    def n(self) -> int:
+        return self.fin.n
+
+    @property
+    def cfg(self) -> AnalogConfig:
+        return self.fin.cfg
+
+    @property
+    def compute_dtype(self):
+        """The analog substrate's dtype (set when the plan was built)."""
+        return self.fin.scale.dtype
+
+    def __call__(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Apply M ~ A^-1 to (..., n); returns (..., n) in v's dtype."""
+        n = self.fin.n
+        if v.ndim == 1:
+            out = blockamc.execute_finalized(self.fin,
+                                             v.astype(self.compute_dtype))
+            return out.astype(v.dtype)
+        lead = v.shape[:-1]
+        cols = v.reshape((-1, n)).T.astype(self.compute_dtype)  # (n, k)
+        out = blockamc.execute_finalized(self.fin, cols)
+        return out.T.reshape(lead + (n,)).astype(v.dtype)
+
+    # LinearOperator-flavoured alias
+    apply = __call__

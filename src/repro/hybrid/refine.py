@@ -1,0 +1,176 @@
+"""The fused analog-seed -> Krylov-refine path, batched and sharded.
+
+`solve_refined` is the end-to-end hybrid solve the paper's Section IV
+sketches: one programmed BlockAMC cascade supplies both the *seed*
+(`x0 = M b`, one analog solve) and, optionally, the *preconditioner* for a
+digital Krylov iteration that polishes the seed to full digital precision.
+Right-hand sides use the solver-service layout (`(n,)` or `(n, k)`
+columns); internally they ride the Krylov drivers' leading axis.
+
+Regime note (recorded by the differential tests and the hybrid benchmark):
+with device noise sigma and condition number kappa, the preconditioned
+operator's spectrum is perturbed by O(kappa * sigma * sqrt(n)); when that
+product is large the noisy analog inverse can leave the SPD cone and PCG
+stalls.  `use_precond=False` then falls back to seed-only refinement -
+plain CG/GMRES from the analog seed - which always converges on the
+digital side and still banks the seed's head start.
+
+`solve_refined_batched` vmaps the whole path (per-key programming included)
+over Monte-Carlo noise keys with the key-independent digital pre-processing
+hoisted, exactly like `blockamc.solve_batched`; `solve_refined_batched_
+sharded` shards that key axis over a device mesh via shard_map.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.blockamc import PartitionedSystem
+from repro.hybrid.krylov import KrylovResult, gmres, pcg
+from repro.hybrid.operators import AnalogPreconditioner, matvec_from_dense
+
+
+def _refine(a: jnp.ndarray, bt: jnp.ndarray, precond: AnalogPreconditioner,
+            method: str, tol: float, maxiter: int, restart: int,
+            use_precond: bool) -> KrylovResult:
+    """Core driver on leading-axis right-hand sides bt: (..., n)."""
+    matvec = matvec_from_dense(a)
+    x0 = precond(bt)                       # the analog seed, one solve
+    mv_m = precond if use_precond else None
+    if method == "cg":
+        return pcg(matvec, bt, precond=mv_m, x0=x0, tol=tol, maxiter=maxiter)
+    if method == "gmres":
+        return gmres(matvec, bt, precond=mv_m, x0=x0, tol=tol,
+                     restart=restart, maxiter=maxiter)
+    raise ValueError(f"unknown method {method!r} (want 'cg' or 'gmres')")
+
+
+@partial(jax.jit, static_argnames=("method", "tol", "maxiter", "restart",
+                                   "use_precond"))
+def _solve_refined_jit(a, bt, precond, method, tol, maxiter, restart,
+                       use_precond):
+    return _refine(a, bt, precond, method, tol, maxiter, restart, use_precond)
+
+
+def solve_refined(a: jnp.ndarray, b: jnp.ndarray,
+                  precond: AnalogPreconditioner, *, method: str = "cg",
+                  tol: float = 1e-10, maxiter: int = 400, restart: int = 32,
+                  use_precond: bool = True,
+                  jit: bool = True) -> Tuple[jnp.ndarray, KrylovResult]:
+    """Hybrid solve of A x = b: analog seed + digital Krylov refinement.
+
+    Args:
+      a:       (n, n) digital system matrix (residuals run in a's dtype -
+               pass float64 under x64 for tolerances beyond f32).
+      b:       (n,) one rhs or (n, k) columns (solver-service layout).
+      precond: programmed analog inverse (seed source; also the Krylov
+               preconditioner unless use_precond=False).
+      method:  "cg" (A SPD) or "gmres" (general A).
+      jit:     False runs the drivers eagerly - the reference the jitted
+               multi-RHS path is pinned to (TESTING.md).
+    Returns:
+      (x, result): x shaped like b; result per-RHS stats in the drivers'
+      leading-axis layout.
+    """
+    single = b.ndim == 1
+    bt = (b if single else b.T).astype(a.dtype)
+    run = _solve_refined_jit if jit else _refine
+    res = run(a, bt, precond, method, float(tol), int(maxiter), int(restart),
+              bool(use_precond))
+    return (res.x if single else res.x.T), res
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo batched / sharded refinement
+# ---------------------------------------------------------------------------
+
+def _refined_mc(a: jnp.ndarray, parts: PartitionedSystem, bt: jnp.ndarray,
+                keys: jax.Array, cfg: AnalogConfig, method: str, tol: float,
+                maxiter: int, restart: int, use_precond: bool):
+    """Program + finalize + refine per noise key, vmapped over keys."""
+
+    def one(k):
+        fplan = blockamc.compile_plan(blockamc.program_system(parts, k, cfg))
+        precond = AnalogPreconditioner(blockamc.finalize(fplan, cfg))
+        return _refine(a, bt, precond, method, tol, maxiter, restart,
+                       use_precond)
+
+    return jax.vmap(one)(keys)    # KrylovResult with a leading key axis
+
+
+@partial(jax.jit, static_argnames=("cfg", "method", "tol", "maxiter",
+                                   "restart", "use_precond"))
+def _refined_mc_jit(a, parts, bt, keys, cfg, method, tol, maxiter, restart,
+                    use_precond):
+    return _refined_mc(a, parts, bt, keys, cfg, method, tol, maxiter,
+                       restart, use_precond)
+
+
+def solve_refined_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
+                          cfg: AnalogConfig, *, stages: Optional[int] = None,
+                          method: str = "cg", tol: float = 1e-10,
+                          maxiter: int = 400, restart: int = 32,
+                          use_precond: bool = True) -> KrylovResult:
+    """Monte-Carlo hybrid solve: one refined solve per noise key, one jit.
+
+    Every key programs its own noisy preconditioner (key-independent digital
+    pre-processing hoisted via `partition_system`) and refines the same
+    right-hand sides.  Returns a KrylovResult with a leading (num_keys, ...)
+    axis on every field; `b` may be (n,) or (n, k) (x comes back as
+    (num_keys, n) / (num_keys, k, n)).
+    """
+    parts = blockamc.partition_system(a, cfg, stages)
+    bt = (b if b.ndim == 1 else b.T).astype(a.dtype)
+    return _refined_mc_jit(a, parts, bt, keys, cfg, method, float(tol),
+                           int(maxiter), int(restart), bool(use_precond))
+
+
+@partial(jax.jit, static_argnames=("cfg", "method", "tol", "maxiter",
+                                   "restart", "use_precond", "mesh",
+                                   "axis_name"))
+def _refined_mc_sharded(a, parts, bt, keys, cfg, method, tol, maxiter,
+                        restart, use_precond, mesh, axis_name):
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.partition import mc_refined_specs
+
+    in_specs, out_specs = mc_refined_specs(axis_name)
+    mapped = shard_map(
+        lambda aa, pp, bb, kk: _refined_mc(aa, pp, bb, kk, cfg, method, tol,
+                                           maxiter, restart, use_precond),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    return mapped(a, parts, bt, keys)
+
+
+def solve_refined_batched_sharded(a: jnp.ndarray, b: jnp.ndarray,
+                                  keys: jax.Array, cfg: AnalogConfig, *,
+                                  stages: Optional[int] = None,
+                                  method: str = "cg", tol: float = 1e-10,
+                                  maxiter: int = 400, restart: int = 32,
+                                  use_precond: bool = True, mesh=None,
+                                  axis_name: str = "mc") -> KrylovResult:
+    """`solve_refined_batched` with the noise-key axis sharded over a mesh.
+
+    Each device programs and refines its own shard of noisy preconditioners;
+    the system matrix, partitioned pre-processing and right-hand sides are
+    replicated (same composition as `blockamc.solve_batched_sharded`).
+    num_keys must divide evenly over the mesh axis.
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_mc_mesh
+        mesh = make_mc_mesh(axis_name=axis_name)
+    n_shards = mesh.shape[axis_name]
+    if keys.shape[0] % n_shards:
+        raise ValueError(
+            f"num_keys={keys.shape[0]} must divide over the "
+            f"{axis_name!r} mesh axis of size {n_shards}")
+    parts = blockamc.partition_system(a, cfg, stages)
+    bt = (b if b.ndim == 1 else b.T).astype(a.dtype)
+    return _refined_mc_sharded(a, parts, bt, keys, cfg, method, float(tol),
+                               int(maxiter), int(restart), bool(use_precond),
+                               mesh, axis_name)

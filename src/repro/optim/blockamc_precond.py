@@ -19,7 +19,8 @@ through `distributed.block_inv`, the digital BlockAMC recursion (GEMM-only,
 mesh-shardable, exactly Algorithm 1's divide-and-conquer identity).
 Optionally those inverses can be routed through the *analog* simulator
 (`use_analog=True`), modelling an AMC accelerator attached to the optimizer
-with the paper's non-idealities + digital refinement (core/hybrid.py).
+with the paper's non-idealities + digital refinement (repro.hybrid: one
+batched analog-preconditioned CG over all identity columns).
 
 This is a lightweight Shampoo-class method: refreshed inverses every
 `update_every` steps, preconditioning only dims <= max_dim.
@@ -32,9 +33,10 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import blockamc, hybrid
+from repro.core import blockamc
 from repro.core.analog import AnalogConfig
 from repro.core.distributed import block_inv
+from repro.hybrid import AnalogPreconditioner, matvec_from_dense, pcg
 
 
 class PrecondState(NamedTuple):
@@ -53,6 +55,10 @@ class BlockAMCPrecond:
     use_analog: bool = False    # route solves through the analog simulator
     analog_cfg: AnalogConfig = AnalogConfig(array_size=64)
     refine_iters: int = 4       # digital refinement after an analog seed
+    analog_precond: bool = False  # also precondition CG with the programmed
+    # arrays: faster under near-ideal programming, but a noisy analog
+    # inverse can leave the SPD cone and make the fixed refine_iters budget
+    # *worse* than seed-only CG (TESTING.md regime map) - so opt-in.
     db_iters: int = 14          # Denman-Beavers iterations for the inv-root
 
     def _eligible(self, p) -> bool:
@@ -90,14 +96,18 @@ class BlockAMCPrecond:
         """One matrix inverse - the BlockAMC primitive (digital or analog)."""
         if not self.use_analog:
             return block_inv(a, self.leaf_size)
-        # analog path: program the matrix once, solve all n identity columns
-        # in one fused multi-RHS call, then refine digitally per column.
+        # analog path: program the matrix once, then run one batched CG over
+        # all n identity columns (leading-axis multi-RHS) seeded by the
+        # fused analog solve; analog_precond=True additionally applies the
+        # programmed cascade inside the iteration.  tol=0 spends exactly
+        # refine_iters iterations per column - the fixed digital budget.
         solver = blockamc.ProgrammedSolver.program(a, key, self.analog_cfg)
+        precond = AnalogPreconditioner.from_solver(solver)
         eye = jnp.eye(a.shape[0], dtype=jnp.float32)
-        x0 = solver.solve_many(eye)
-        return jax.vmap(
-            lambda b, x: hybrid.cg_refine(a, b, x, self.refine_iters),
-            in_axes=1, out_axes=1)(eye, x0)
+        res = pcg(matvec_from_dense(a), eye,
+                  precond=precond if self.analog_precond else None,
+                  x0=precond(eye), tol=0.0, maxiter=self.refine_iters)
+        return res.x.T    # row i solves A x = e_i -> column i of A^-1
 
     def _invert(self, gram: jnp.ndarray, key) -> jnp.ndarray:
         """(G + lambda I)^-1/2 via Denman-Beavers (inverse-only iteration)."""

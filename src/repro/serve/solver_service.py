@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.analog import AnalogConfig
 from repro.core.blockamc import ProgrammedSolver
+from repro.hybrid import AnalogPreconditioner, solve_refined as _solve_refined
 
 
 @dataclasses.dataclass
@@ -29,6 +30,8 @@ class MatrixStats:
     program_time_s: float        # time-to-first-solve cost, paid once
     solve_calls: int = 0         # fused solve invocations
     rhs_served: int = 0          # individual right-hand sides solved
+    refined_calls: int = 0       # hybrid analog-seed -> Krylov-refine calls
+    refine_iters: int = 0        # total digital Krylov iterations spent
 
 
 class SolverService:
@@ -44,6 +47,7 @@ class SolverService:
         self.cfg = cfg
         self.stages = stages
         self._solvers: Dict[str, ProgrammedSolver] = {}
+        self._dense: Dict[str, jnp.ndarray] = {}
         self._queues: Dict[str, List[jnp.ndarray]] = {}
         self._stats: Dict[str, MatrixStats] = {}
 
@@ -73,6 +77,7 @@ class SolverService:
         jax.block_until_ready(solver.solve(jnp.zeros((solver.n, 1),
                                                      dtype=a.dtype)))
         self._solvers[matrix_id] = solver
+        self._dense[matrix_id] = a   # digital copy for hybrid refinement
         self._queues[matrix_id] = []
         self._stats[matrix_id] = MatrixStats(
             program_time_s=time.perf_counter() - t0)
@@ -96,6 +101,49 @@ class SolverService:
         st.rhs_served += 1 if b.ndim == 1 else b.shape[1]
         return x
 
+    def solve_refined(self, matrix_id: str, b: jnp.ndarray, *,
+                      tol: float = 1e-6, method: str = "cg",
+                      maxiter: int = 400, restart: int = 32,
+                      use_precond: bool = False) -> jnp.ndarray:
+        """Hybrid solve: analog seed from the programmed arrays + digital
+        Krylov refinement against the stored digital matrix.
+
+        One fused call per (n,) rhs or (n, k) batch: the programmed solver
+        supplies the seed, and `repro.hybrid` polishes to `tol` relative
+        residual.  Defaults suit the f32 serving path; program the matrix
+        under x64 and pass a tighter tol for full double precision.
+
+        use_precond=False (default) refines seed-only - always convergent
+        on the digital side whatever the programming noise.  use_precond=
+        True additionally applies the programmed arrays as the Krylov
+        preconditioner: much faster when noise x condition is small (see
+        TESTING.md), but a strongly perturbed analog inverse can leave the
+        SPD cone and stall CG, so it is opt-in for serving.
+        """
+        x, info = self._refine(matrix_id, b, tol=tol, method=method,
+                               maxiter=maxiter, restart=restart,
+                               use_precond=use_precond)
+        self._count_refined(matrix_id, 1 if b.ndim == 1 else b.shape[1],
+                            info)
+        return x
+
+    def _refine(self, matrix_id: str, b: jnp.ndarray, *, tol: float = 1e-6,
+                method: str = "cg", maxiter: int = 400, restart: int = 32,
+                use_precond: bool = False):
+        """Stats-free refine core shared by solve_refined and flush."""
+        a = self._dense[matrix_id]
+        precond = AnalogPreconditioner.from_solver(self._solvers[matrix_id])
+        return _solve_refined(a, b, precond, method=method, tol=tol,
+                              maxiter=maxiter, restart=restart,
+                              use_precond=use_precond)
+
+    def _count_refined(self, matrix_id: str, n_rhs: int, info) -> None:
+        st = self._stats[matrix_id]
+        st.solve_calls += 1
+        st.rhs_served += n_rhs
+        st.refined_calls += 1
+        st.refine_iters += int(jnp.sum(info.iters))
+
     def submit(self, matrix_id: str, b: jnp.ndarray) -> int:
         """Queue one (n,) rhs for the next flush; returns its queue slot."""
         n = self._solvers[matrix_id].n
@@ -108,7 +156,8 @@ class SolverService:
     def pending(self, matrix_id: str) -> int:
         return len(self._queues[matrix_id])
 
-    def flush(self, matrix_id: str) -> jnp.ndarray:
+    def flush(self, matrix_id: str, *, refined: bool = False,
+              **refine_kw) -> jnp.ndarray:
         """Solve all queued right-hand sides in one fused call.
 
         Returns (n, k) solutions, column j answering the j-th submit since
@@ -116,19 +165,32 @@ class SolverService:
         to the next power of two before solving (zero columns, sliced away)
         so the jitted executor compiles at most one new shape per doubling
         instead of one per distinct queue length.
+
+        refined=True routes the padded batch through the fused analog-seed
+        -> Krylov-refine path instead of the raw analog solve (padding zero
+        columns start converged, so they never contribute iterations);
+        `refine_kw` forwards to `solve_refined` (tol/method/maxiter/...).
         """
         q = self._queues[matrix_id]
         solver = self._solvers[matrix_id]
         if not q:
-            return jnp.zeros((solver.n, 0))
+            return jnp.zeros((solver.n, 0),
+                             dtype=self._dense[matrix_id].dtype)
         k = len(q)
         k_pad = 1 << (k - 1).bit_length()
         bs = jnp.stack(q, axis=1)
         if k_pad > k:
             bs = jnp.pad(bs, ((0, 0), (0, k_pad - k)))
-        xs = solver.solve_many(bs)[:, :k]
+        if refined:
+            xs_full, info = self._refine(matrix_id, bs, **refine_kw)
+            xs = xs_full[:, :k]
+            # only the k real columns count as served (padding columns are
+            # zero right-hand sides: they start converged, zero iterations)
+            self._count_refined(matrix_id, k, info)
+        else:
+            xs = solver.solve_many(bs)[:, :k]
+            st = self._stats[matrix_id]
+            st.solve_calls += 1
+            st.rhs_served += k
         self._queues[matrix_id] = []    # only drop requests once answered
-        st = self._stats[matrix_id]
-        st.solve_calls += 1
-        st.rhs_served += k
         return xs

@@ -204,3 +204,15 @@ def mc_solve_specs(axis_name: str = "mc"):
     `(partitioned_system, b, keys) -> solutions`.
     """
     return (P(), P(), P(axis_name)), P(axis_name)
+
+
+def mc_refined_specs(axis_name: str = "mc"):
+    """shard_map specs for a Monte-Carlo *hybrid refined* solve.
+
+    Same discipline as `mc_solve_specs` with the dense digital matrix along
+    for the ride: `(a, partitioned_system, b, keys) -> KrylovResult`.  The
+    matrix, pre-processing and right-hand sides are replicated; each device
+    programs and refines its own shard of noisy preconditioners, and every
+    field of the per-key KrylovResult comes back sharded on the key axis.
+    """
+    return (P(), P(), P(), P(axis_name)), P(axis_name)

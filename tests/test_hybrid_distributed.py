@@ -24,14 +24,53 @@ def test_cg_refine_converges():
 
 
 def test_analog_seed_saves_iterations():
-    """The paper's positioning: AMC seed accelerates digital iteration."""
+    """The paper's positioning: AMC seed accelerates digital iteration.
+
+    The seed comes from a `ProgrammedSolver` - programmed once, *outside*
+    the iteration - and the refinement runs through the batched hybrid
+    drivers, so this exercises the genuine analog->digital hand-off (the
+    old version rebuilt the plan per call and only ever timed the digital
+    path).  Richardson is the discriminating iteration: its saving is
+    proportional to log(seed error), where Krylov methods barely move.
+    """
     a = wishart(KA, 96)
     b = random_rhs(KB, 96)
     cfg = AnalogConfig(array_size=48, nonideal=NonidealConfig(sigma=0.05))
-    x_seed = blockamc.solve(a, b, KN, cfg, stages=1)
-    _, it_seed = hybrid.iterations_to_tol(a, b, x_seed, tol=1e-5)
-    _, it_zero = hybrid.iterations_to_tol(a, b, jnp.zeros_like(b), tol=1e-5)
-    assert int(it_seed) <= int(it_zero)
+    solver = blockamc.ProgrammedSolver.program(a, KN, cfg, stages=1)
+    x_seed = solver.solve(b)
+    assert float(jnp.linalg.norm(b - a @ x_seed)) > 0.0   # noisy, not exact
+    _, it_seed = hybrid.iterations_to_tol(a, b, x_seed, tol=1e-5,
+                                          method="richardson",
+                                          max_iters=20000)
+    _, it_zero = hybrid.iterations_to_tol(a, b, jnp.zeros_like(b), tol=1e-5,
+                                          method="richardson",
+                                          max_iters=20000)
+    assert int(it_seed) < int(it_zero)                    # strict saving
+    # and the batched driver seeded with the same x0 agrees on convergence
+    res = hybrid.pcg(hybrid.matvec_from_dense(a), b, x0=x_seed, tol=1e-5,
+                     maxiter=500)
+    assert bool(res.converged)
+
+
+@pytest.mark.slow
+def test_refined_256_two_stage_reaches_1e10():
+    """The 256^2 paper config (Fig. 8: two stages, 64^2 arrays) refined to
+    full double precision: seed-only CG from the programmed analog solve
+    reaches 1e-10 where the sigma=0.05 analog cascade alone cannot."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        n = 256
+        a = wishart(KA, n, dtype=jnp.float64)
+        b = random_rhs(KB, n).astype(jnp.float64)
+        cfg = AnalogConfig(array_size=64,
+                           nonideal=NonidealConfig(sigma=0.05))
+        precond = hybrid.AnalogPreconditioner.program(a, KN, cfg, stages=2)
+        raw_res = float(jnp.linalg.norm(b - a @ precond(b))
+                        / jnp.linalg.norm(b))
+        assert raw_res > 1e-6
+        x, res = hybrid.solve_refined(a, b, precond, method="cg", tol=1e-10,
+                                      maxiter=2000, use_precond=False)
+        assert bool(res.converged) and float(res.resnorm) <= 1e-10
 
 
 def test_richardson_reduces_residual():

@@ -1,0 +1,161 @@
+"""Property-based plan-compilation invariants (flat + finalized forms).
+
+The fixed-size goldens (test_flat_executor / test_golden_regression) pin
+*values*; these tests pin the *structural* invariants of `compile_plan` /
+`finalize` for random (n, stages) draws:
+
+  * the flat schedule is well-formed: straight-line SSA over virtual
+    registers (every register written before read, one new register per
+    level), every operand length type-checks, and the final register is the
+    full n-vector;
+  * the shape buckets cover all physical arrays: every stacked array is
+    referenced by the schedule at least once, every schedule reference is
+    in range, and bucket keys match stack shapes;
+  * finalized MVM windows tile exactly: each tile-row's input windows are
+    contiguous from 0 to the level's input length, each tile is used
+    exactly once, and group stacks/windows are congruent.
+
+Runs under hypothesis when installed (tests/_hypothesis_compat.py); a
+fixed-size parametrized sweep keeps tier-1 coverage without it.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import wishart
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+KEY = jax.random.PRNGKey(5)
+KA, KN = jax.random.split(KEY)
+
+
+def _check_flat_plan(fplan: blockamc.FlatPlan, n: int) -> None:
+    inv_counts = [g.shape[-3] for g in fplan.inv_stacks]
+    mvm_counts = [g.shape[-3] for g in fplan.mvm_stacks]
+    used_inv, used_mvm = set(), set()
+    lengths = {0: n}                  # register 0 is the cascade input
+    next_reg = 1
+    for instr in fplan.schedule:
+        op = instr[0]
+        if op == "slice":
+            _, src, lo, hi = instr
+            assert 0 <= src < next_reg, "read before write"
+            assert 0 <= lo < hi <= lengths[src]
+            lengths[next_reg] = hi - lo
+        elif op == "inv":
+            _, bk, i, src = instr
+            assert 0 <= src < next_reg
+            assert 0 <= bk < len(inv_counts) and 0 <= i < inv_counts[bk]
+            used_inv.add((bk, i))
+            r, c = fplan.inv_stacks[bk].shape[-2:]
+            assert r == c == lengths[src], "INV operand length mismatch"
+            lengths[next_reg] = r
+        elif op == "mvm":
+            _, rows, src = instr
+            assert 0 <= src < next_reg
+            in_len, out_len = None, 0
+            for row in rows:
+                row_cols, row_rows = 0, None
+                for bk, i in row:
+                    assert 0 <= bk < len(mvm_counts)
+                    assert 0 <= i < mvm_counts[bk]
+                    used_mvm.add((bk, i))
+                    r, c = fplan.mvm_stacks[bk].shape[-2:]
+                    row_rows = r if row_rows is None else row_rows
+                    assert r == row_rows, "ragged tile-row heights"
+                    row_cols += c
+                in_len = row_cols if in_len is None else in_len
+                assert row_cols == in_len, "tile-rows span different widths"
+                out_len += row_rows
+            assert in_len == lengths[src], "MVM operand length mismatch"
+            lengths[next_reg] = out_len
+        elif op == "add":
+            _, s1, r1, s2, r2 = instr
+            assert s1 in (-1, 1) and s2 in (-1, 1)
+            assert 0 <= r1 < next_reg and 0 <= r2 < next_reg
+            assert lengths[r1] == lengths[r2]
+            lengths[next_reg] = lengths[r1]
+        elif op == "catneg":
+            _, r1, r2 = instr
+            assert 0 <= r1 < next_reg and 0 <= r2 < next_reg
+            lengths[next_reg] = lengths[r1] + lengths[r2]
+        else:
+            raise AssertionError(f"unknown schedule op {op!r}")
+        next_reg += 1
+    assert next_reg == len(fplan.schedule) + 1     # one register per level
+    assert lengths[next_reg - 1] == n              # output is the n-vector
+    # buckets cover all arrays: every stacked array is used, keys match
+    assert used_inv == {(b, i) for b, c in enumerate(inv_counts)
+                        for i in range(c)}
+    assert used_mvm == {(b, i) for b, c in enumerate(mvm_counts)
+                        for i in range(c)}
+    for g, (_, shape) in zip(fplan.inv_stacks, fplan.inv_keys):
+        assert tuple(g.shape[-2:]) == tuple(shape)
+    for g, (_, shape) in zip(fplan.mvm_stacks, fplan.mvm_keys):
+        assert tuple(g.shape[-2:]) == tuple(shape)
+    assert fplan.num_arrays == sum(inv_counts) + sum(mvm_counts)
+
+
+def _check_finalized(fin: blockamc.FinalizedPlan) -> None:
+    fmvm_levels = [i for i in fin.schedule if i[0] == "fmvm"]
+    assert len(fmvm_levels) == len(fin.mvm_levels)
+    assert {i[1] for i in fmvm_levels} == set(range(len(fin.mvm_levels)))
+    assert not any(i[0] == "mvm" for i in fin.schedule)  # all rewritten
+    for lvl in fin.mvm_levels:
+        for stack, wins in zip(lvl.stacks, lvl.windows):
+            assert stack.shape[0] == len(wins)
+            for lo, hi in wins:
+                assert hi - lo == stack.shape[-1], "window != tile width"
+        if lvl.divs:
+            assert len(lvl.divs) == len(lvl.rows)
+        seen = set()
+        totals = set()
+        for refs in lvl.rows:
+            off = 0
+            for g, i in refs:
+                assert (g, i) not in seen, "tile used twice"
+                seen.add((g, i))
+                lo, hi = lvl.windows[g][i]
+                assert lo == off, "windows do not tile contiguously"
+                off = hi
+            totals.add(off)
+        assert len(totals) == 1, "tile-rows span different input lengths"
+        assert seen == {(g, i) for g, wins in enumerate(lvl.windows)
+                        for i in range(len(wins))}, "orphaned tiles"
+
+
+def _build_and_check(n: int, stages: int, sigma: float) -> None:
+    cfg = AnalogConfig(array_size=max(-(-n // max(2 ** stages, 1)), 2),
+                       nonideal=NonidealConfig(sigma=sigma), opa_gain=1e4)
+    a = wishart(KA, n)
+    fplan = blockamc.compile_plan(blockamc.build_plan(a, KN, cfg,
+                                                      stages=stages))
+    _check_flat_plan(fplan, n)
+    _check_finalized(blockamc.finalize(fplan, cfg))
+
+
+@pytest.mark.parametrize("n,stages", [
+    (8, 0), (17, 1), (24, 2), (33, 2), (64, 2), (13, 3),
+])
+def test_plan_invariants_fixed(n, stages):
+    _build_and_check(n, stages, sigma=0.05)
+
+
+@given(n=st.integers(min_value=6, max_value=48),
+       stages=st.integers(min_value=0, max_value=3),
+       noisy=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_plan_invariants_random(n, stages, noisy):
+    """Random n x stages (ragged odd splits included): schedule well-formed,
+    buckets cover all arrays, finalized windows tile exactly."""
+    _build_and_check(n, stages, sigma=0.05 if noisy else 0.0)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_hypothesis_is_exercised_in_ci():
+    """Guard: CI installs hypothesis, so the property tests above run
+    there even when local environments skip them."""
+    assert HAVE_HYPOTHESIS

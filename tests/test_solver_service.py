@@ -1,0 +1,125 @@
+"""SolverService error/edge paths + the hybrid `solve_refined` mode.
+
+Happy-path batching coverage lives in test_programmed_solver.py; this file
+pins the service's failure discipline (nothing queued is ever dropped, bad
+requests are rejected before touching state) and the new refined mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+from repro.serve import SolverService
+
+KEY = jax.random.PRNGKey(21)
+KA, KB, KN = jax.random.split(KEY, 3)
+N = 32
+CFG = AnalogConfig(array_size=16, nonideal=NonidealConfig(sigma=0.02))
+
+
+def _service():
+    svc = SolverService(CFG, stages=1)
+    a = wishart(KA, N)
+    svc.program("m0", a, KN)
+    return svc, a
+
+
+def test_flush_empty_queue_returns_n_by_0():
+    svc, _ = _service()
+    xs = svc.flush("m0")
+    assert xs.shape == (N, 0)
+    assert svc.stats("m0").solve_calls == 0     # nothing was solved
+    xs = svc.flush("m0", refined=True)          # refined path: same contract
+    assert xs.shape == (N, 0)
+
+
+def test_submit_rejects_mismatched_rhs():
+    svc, _ = _service()
+    with pytest.raises(ValueError, match="rhs"):
+        svc.submit("m0", jnp.zeros((N, 2)))     # matrix, not a vector
+    with pytest.raises(ValueError, match="rhs"):
+        svc.submit("m0", jnp.zeros((N + 1,)))   # wrong length
+    with pytest.raises(ValueError, match="rhs"):
+        svc.submit("m0", jnp.zeros(()))         # scalar
+    assert svc.pending("m0") == 0               # rejected before queueing
+
+
+def test_unknown_matrix_id_raises():
+    svc, _ = _service()
+    with pytest.raises(KeyError):
+        svc.solve("nope", jnp.zeros((N,)))
+    with pytest.raises(KeyError):
+        svc.submit("nope", jnp.zeros((N,)))
+    with pytest.raises(KeyError):
+        svc.solve_refined("nope", jnp.zeros((N,)))
+
+
+def test_double_program_replaces_cleanly_or_refuses_over_pending():
+    svc, a = _service()
+    first = svc.solver("m0")
+    svc.solve("m0", random_rhs(KB, N))
+    # re-programming with an empty queue replaces solver and resets stats
+    a2 = wishart(KB, N)
+    svc.program("m0", a2, KN)
+    assert svc.solver("m0") is not first
+    st = svc.stats("m0")
+    assert st.solve_calls == 0 and st.rhs_served == 0
+    assert st.program_time_s > 0
+    x = svc.solve("m0", random_rhs(KB, N))      # solves the *new* matrix
+    np.testing.assert_allclose(
+        np.asarray(x), np.asarray(svc.solver("m0").solve(random_rhs(KB, N))),
+        rtol=1e-5, atol=1e-6)
+    # ...but refuses while right-hand sides are still queued
+    svc.submit("m0", random_rhs(KB, N))
+    with pytest.raises(RuntimeError, match="pending"):
+        svc.program("m0", a, KN)
+    assert svc.pending("m0") == 1               # queue untouched by refusal
+
+
+def test_solve_refined_beats_raw_solve():
+    svc, a = _service()
+    b = random_rhs(KB, N)
+    x_raw = svc.solve("m0", b)
+    x_ref = svc.solve_refined("m0", b, tol=1e-6, maxiter=200)
+    res_raw = float(jnp.linalg.norm(b - a @ x_raw) / jnp.linalg.norm(b))
+    res_ref = float(jnp.linalg.norm(b - a @ x_ref) / jnp.linalg.norm(b))
+    assert res_ref <= 1e-5                      # f32 digital refinement
+    assert res_ref < res_raw                    # the noisy solve alone
+    st = svc.stats("m0")
+    assert st.refined_calls == 1 and st.refine_iters >= 1
+    assert st.solve_calls == 2 and st.rhs_served == 2
+
+
+def test_refined_flush_matches_immediate_refined_solves():
+    svc, a = _service()
+    cols = [jax.random.normal(jax.random.fold_in(KB, j), (N,))
+            for j in range(5)]
+    for b in cols:
+        svc.submit("m0", b)
+    xs = svc.flush("m0", refined=True, tol=1e-6, maxiter=200)
+    assert xs.shape == (N, 5) and svc.pending("m0") == 0
+    for j, b in enumerate(cols):
+        res = float(jnp.linalg.norm(b - a @ xs[:, j]) / jnp.linalg.norm(b))
+        assert res <= 1e-5
+        np.testing.assert_allclose(
+            np.asarray(xs[:, j]),
+            np.asarray(svc.solve_refined("m0", b, tol=1e-6, maxiter=200)),
+            rtol=1e-4, atol=1e-5)
+    assert svc.stats("m0").rhs_served == 10     # 5 flushed + 5 immediate
+    assert svc.stats("m0").refined_calls == 6
+
+
+def test_refined_flush_gmres_mode():
+    svc, a = _service()
+    for j in range(3):
+        svc.submit("m0", jax.random.normal(jax.random.fold_in(KB, j), (N,)))
+    xs = svc.flush("m0", refined=True, method="gmres", tol=1e-5,
+                   maxiter=256, restart=16, use_precond=False)
+    assert xs.shape == (N, 3)
+    for j in range(3):
+        b = jax.random.normal(jax.random.fold_in(KB, j), (N,))
+        r = float(jnp.linalg.norm(b - a @ xs[:, j]) / jnp.linalg.norm(b))
+        assert r <= 1e-4
