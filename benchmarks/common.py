@@ -85,8 +85,18 @@ def mc_errors(family: str, n: int, cfg: AnalogConfig, solver: str,
     return np.asarray(errs)
 
 
-def timed(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-clock microseconds per call (CPU; documentation only)."""
+# Shared timing protocol: warmup calls (compile + cache warm) followed by a
+# median over N measured calls.  The defaults are overridable per run via
+# run.py --bench-warmup/--bench-iters (shared CI runners are noisy; the
+# nightly diff gate depends on these numbers being stable).
+TIMED_WARMUP = 3
+TIMED_ITERS = 9
+
+
+def timed(fn: Callable, *args, warmup: int = None, iters: int = None) -> float:
+    """Median wall-clock microseconds per call after warmup (CPU)."""
+    warmup = TIMED_WARMUP if warmup is None else warmup
+    iters = TIMED_ITERS if iters is None else iters
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

@@ -4,10 +4,15 @@
 
 Flattens every `*.json` in both directories to dotted numeric paths and
 reports, per metric, the old value, new value and relative change; metrics
-whose |relative change| exceeds the threshold are flagged.  Report-only by
-design: nightly runs on shared CI runners are noisy, so the job uploads the
-diff for humans instead of failing the build (tier-1 correctness gating
-lives in the test suite, not here).
+whose |relative change| exceeds the report threshold are flagged.
+
+The nightly additionally *gates*: direction-aware regressions beyond
+--gate-threshold (default 25%, far above runner noise at the default
+warmup+median timing protocol) make the script exit nonzero so the job
+fails instead of silently accumulating a slowdown.  A metric counts as a
+regression when a time-like value (`*_us`, `*_s`, `us_per_call`) grows or
+a `speedup`-like value shrinks; accuracy/config metrics only ever report.
+--no-gate restores report-only behaviour.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ import argparse
 import json
 import os
 import sys
-from typing import Dict
+from typing import Dict, List, Tuple
 
 
 def _flatten(obj, prefix="") -> Dict[str, float]:
@@ -47,11 +52,37 @@ def _load_dir(path: str) -> Dict[str, Dict[str, float]]:
     return out
 
 
-def diff(baseline_dir: str, current_dir: str, threshold: float = 0.10) -> str:
+def _regression_direction(key: str) -> int:
+    """+1 if larger is worse (times), -1 if smaller is worse (speedups),
+    0 if the metric has no gating direction (accuracy, configs, flags).
+
+    Ratio-of-times metrics like `amortization` (= ttfs/marginal) are
+    deliberately ungated: both numerator and denominator are themselves
+    gated times, and a pure programming-time *improvement* shrinks the
+    ratio - gating it would fail the nightly on a strict win.  Single-shot
+    measurements (`time_to_first_solve_us`: one perf_counter sample around
+    plan build + jit compile, outside the warmup+median protocol the 25%
+    threshold is calibrated for) are report-only as well.
+    """
+    leaf = key.rsplit(".", 1)[-1].lower()
+    if "amortization" in leaf or "time_to_first_solve" in leaf:
+        return 0
+    if "speedup" in leaf:
+        return -1
+    if leaf.endswith("_us") or leaf.endswith("_s") or leaf == "us_per_call":
+        return +1
+    return 0
+
+
+def diff(baseline_dir: str, current_dir: str, threshold: float = 0.10,
+         gate_threshold: float = 0.25
+         ) -> Tuple[str, List[str]]:
+    """Returns (markdown report, list of gated regression descriptions)."""
     base = _load_dir(baseline_dir)
     cur = _load_dir(current_dir)
     lines = ["# Bench diff", "",
              f"baseline: `{baseline_dir}`  current: `{current_dir}`", ""]
+    regressions: List[str] = []
     if not base:
         lines.append("_no baseline artifacts (first nightly run?) - "
                      "nothing to diff_")
@@ -76,10 +107,18 @@ def diff(baseline_dir: str, current_dir: str, threshold: float = 0.10) -> str:
             if abs(rel) >= threshold:
                 flagged.append(f"- `{key}`: {b[key]:g} -> {c[key]:g} "
                                f"({rel:+.1%})")
+            direction = _regression_direction(key)
+            if direction and rel * direction >= gate_threshold:
+                regressions.append(f"{name}:{key}: {b[key]:g} -> {c[key]:g} "
+                                   f"({rel:+.1%})")
         lines.append(f"## {name}: {changed} metric(s) changed, "
                      f"{len(flagged)} flagged (>= {threshold:.0%})")
         lines.extend(flagged)
-    return "\n".join(lines) + "\n"
+    if regressions:
+        lines += ["", f"## GATED REGRESSIONS (>= {gate_threshold:.0%}, "
+                      f"direction-aware)"]
+        lines += [f"- {r}" for r in regressions]
+    return "\n".join(lines) + "\n", regressions
 
 
 def main() -> None:
@@ -88,14 +127,24 @@ def main() -> None:
     ap.add_argument("current_dir")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative change that gets flagged (default 10%%)")
+    ap.add_argument("--gate-threshold", type=float, default=0.25,
+                    help="direction-aware regression that fails the run "
+                         "(default 25%%)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; never exit nonzero")
     ap.add_argument("--out", default=None, help="also write the report here")
     args = ap.parse_args()
-    report = diff(args.baseline_dir, args.current_dir, args.threshold)
+    report, regressions = diff(args.baseline_dir, args.current_dir,
+                               args.threshold, args.gate_threshold)
     print(report)
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
         with open(args.out, "w") as f:
             f.write(report)
+    if regressions and not args.no_gate:
+        print(f"FAIL: {len(regressions)} gated regression(s) "
+              f">= {args.gate_threshold:.0%}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

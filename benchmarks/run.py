@@ -36,7 +36,18 @@ def main() -> None:
                     help="comma-separated subset, e.g. fig6,fig10")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke mode: tiniest configs, <1 min per suite")
+    ap.add_argument("--bench-warmup", type=int, default=None,
+                    help="warmup calls before timing (default %d)"
+                         % common.TIMED_WARMUP)
+    ap.add_argument("--bench-iters", type=int, default=None,
+                    help="timed calls per median (default %d)"
+                         % common.TIMED_ITERS)
     args = ap.parse_args()
+
+    if args.bench_warmup is not None:
+        common.TIMED_WARMUP = args.bench_warmup
+    if args.bench_iters is not None:
+        common.TIMED_ITERS = args.bench_iters
 
     if args.paper:
         hybrid_refinement.N = hybrid_refinement.N_PAPER

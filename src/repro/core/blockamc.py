@@ -53,6 +53,56 @@ gathered into fused (num_tiles, r, c) stacks, so each subsequent solve is
 pure batched `lu_solve`s and stacked matmuls - the paper's program-once /
 solve-many cost model.  `execute_flat` remains the unfinalized reference the
 finalized path is pinned to bit-for-bit.
+
+DESIGN - the arena executor (`compile_arena` / `ArenaPlan` / `execute_arena`)
+=============================================================================
+The serving hot path compiles one step further.  `execute_finalized` still
+runs a Python-interpreted schedule of small XLA ops: a growing register
+list, `jnp.concatenate` at every "catneg", per-tile-row Python loops in
+`_MvmLevel.apply`, and one `lu_solve` per INV level.  The AMC hardware view
+(Sun & Ielmini 2022) is simpler: the INV macro is a one-step closed-form
+inverse operator and the cascade is a handful of stacked MVMs.  The arena
+form mirrors that:
+
+  * **Static register arena.**  At compile time a live-range analysis walks
+    the flat schedule.  Only *compute* results (leaf INV outputs, MVM
+    outputs) and the DAC'd input vector are materialized; each gets a
+    static offset in one preallocated f32 arena (trailing RHS-batch dim).
+    The offline allocator (best of first-fit-in-def-order and
+    greedy-by-size over the known live intervals) recycles dead slots: the
+    arena extent equals the schedule's peak liveness exactly on aligned
+    power-of-two schedules and stays within one slot of it on ragged odd
+    splits (`tests/test_plan_properties.py` pins no-overlap, window
+    containment and both bounds).
+  * **Wiring ops cost zero copies.**  "slice"/"add"/"catneg" levels never
+    execute: they are folded into *views* - each consumer reads its operand
+    as a static list of signed slot windows (segment = (dst_lo, len,
+    ((mreg, local_off, sign), ...)), arena offset = slot_offsets[mreg] +
+    local_off), evaluated in the reference accumulation order, so the
+    gather is bit-identical to the folded adds/negations.
+  * **One stacked-tile form for INV and MVM.**  Every INV bucket's
+    effective operator is explicitly inverted once at compile time (batched
+    solve of the identity against the finalize-time LU factors, sign
+    folded: W = -A_fx^-1), and every MVM tile's operator is stored with the
+    circuit sign and its tile-row's finite-gain summing-node divisor folded
+    in (W = -A_eff / div).  Each runtime level is then `out += W @ gather`
+    - pure stacked matmuls.
+  * **Two executions of one layout.**  On TPU the Pallas level-megakernel
+    (`repro.kernels.arena_mvm`) owns the physical arena buffer - uniform
+    power-of-two plans flatten to a whole-schedule tile program
+    (`ArenaPlan.program`) run as ONE pallas_call; `interpret=True` runs
+    the same body on CPU (the CI smoke).  The CPU fast path executes the
+    identical layout in slot-SSA form (each slot its own XLA value), which
+    keeps the gathers/writes fusible and skips whole-arena update copies.
+
+Bit-compat contract: recursive == flat == finalized stays bit-for-bit on
+CPU (eager) as before.  The arena mode is *float-tolerance* by design - the
+explicit inverse reassociates the INV solve and the divisor is applied
+before the tile dot instead of after - and is pinned against the finalized
+executor by the four-way equivalence suite (tests/test_fused_arena.py,
+TESTING.md).  It is the default `mode="fused"` on the serving surfaces
+(`ProgrammedSolver`, `SolverService`, `AnalogPreconditioner`);
+`mode="reference"` keeps the finalized path.
 """
 from __future__ import annotations
 
@@ -751,36 +801,558 @@ _execute_finalized = jax.jit(execute_finalized)
 _execute_finalized_donated = jax.jit(execute_finalized, donate_argnums=(1,))
 
 
+# ---------------------------------------------------------------------------
+# Arena executor: single-dispatch fused serving form
+#
+# See the module docstring's DESIGN note for the layout and the
+# accumulation-order contract.  Static metadata vocabulary (hashable aux
+# data; every number is a Python int).  Operand windows carry *both*
+# coordinate systems: the materialized register they read (slot-SSA form,
+# used by the jnp executor so XLA never copies the whole arena per level)
+# and the resolved arena offset (`slot_offsets[m] + local`, used by the
+# Pallas megakernel, the uniform whole-schedule program and the allocator
+# property tests):
+#
+#   term     (mreg, local_off, sign)       one signed window read
+#   segment  (dst_lo, seg_len, terms)      one contiguous chunk of an operand
+#   tile     (stack_id, idx, m_out, init,  one operator application, in
+#             segs)                        schedule order; init=True starts
+#                                          its output register / row,
+#                                          False accumulates into it
+#   level    tuple of tiles                one schedule compute level
+# ---------------------------------------------------------------------------
+
+
+# --- compile-time views: registers as signed windows over materialized regs.
+# A view is a tuple of chunks (chunk_len, terms), terms = ((mreg, off, sign),
+# ...): position i of the chunk reads sum_t sign_t * mreg_t[off_t + i].
+
+def _view_slice(view, lo, hi):
+    out, pos = [], 0
+    for chunk_len, terms in view:
+        s_lo, s_hi = max(lo, pos), min(hi, pos + chunk_len)
+        if s_lo < s_hi:
+            d = s_lo - pos
+            out.append((s_hi - s_lo,
+                        tuple((m, o + d, s) for m, o, s in terms)))
+        pos += chunk_len
+    return tuple(out)
+
+
+def _view_scale(view, sign):
+    if sign > 0:
+        return view
+    return tuple((n_, tuple((m, o, -s) for m, o, s in terms))
+                 for n_, terms in view)
+
+
+def _view_add(v1, v2):
+    """Refine two equal-length views to common chunk boundaries; the term
+    order (all of v1's chunk terms, then v2's) replays `x1 + x2`."""
+    out = []
+    v1, v2 = list(v1), list(v2)
+    i = j = 0
+    while i < len(v1):
+        l1, t1 = v1[i]
+        l2, t2 = v2[j]
+        step = min(l1, l2)
+        out.append((step, t1 + t2))
+        if l1 > step:
+            v1[i] = (l1 - step, tuple((m, o + step, s) for m, o, s in t1))
+        else:
+            i += 1
+        if l2 > step:
+            v2[j] = (l2 - step, tuple((m, o + step, s) for m, o, s in t2))
+        else:
+            j += 1
+    return tuple(out)
+
+
+def _view_len(view):
+    return sum(chunk_len for chunk_len, _ in view)
+
+
+@jax.tree_util.register_pytree_node_class
+class ArenaPlan:
+    """Arena-form of a FinalizedPlan: the single-dispatch serving executor.
+
+    `stacks` holds every operator the schedule applies, uniformly as
+    (num, rows, cols) tensors: first one stack per INV bucket (explicit
+    negated inverses, finite-gain loading folded in before inversion), then
+    one per (MVM level, tile shape) group (circuit sign and summing-node
+    divisor folded into the rows).  `levels` / `out_spec` / `slot_offsets`
+    / `slot_ranges` are static metadata (see the vocabulary note above):
+    `slot_offsets[m]` is materialized register m's arena offset and
+    `slot_ranges` its (offset, length, def_pos, last_use) live range (the
+    allocator property tests read these).  `program`, present when every
+    tile shares one shape with whole-window gathers (the power-of-two
+    serving configs), is the whole schedule flattened to arena-resolved
+    metadata arrays - the form the Pallas megakernel executes in ONE call.
+    """
+
+    def __init__(self, stacks, scale, program, levels, out_spec, arena_size,
+                 n, in_off, cfg, kernel_ok, num_arrays, slot_offsets,
+                 slot_ranges, peak_liveness):
+        self.stacks = stacks
+        self.scale = scale
+        self.program = program    # uniform whole-schedule form, or None
+        self.levels = levels
+        self.out_spec = out_spec
+        self.arena_size = arena_size
+        self.n = n
+        self.in_off = in_off
+        self.cfg = cfg
+        self.kernel_ok = kernel_ok
+        self.num_arrays = num_arrays
+        self.slot_offsets = slot_offsets
+        self.slot_ranges = slot_ranges
+        self.peak_liveness = peak_liveness
+
+    def tree_flatten(self):
+        return ((self.stacks, self.scale, self.program),
+                (self.levels, self.out_spec, self.arena_size, self.n,
+                 self.in_off, self.cfg, self.kernel_ok, self.num_arrays,
+                 self.slot_offsets, self.slot_ranges, self.peak_liveness))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        stacks, scale, program = children
+        return cls(stacks, scale, program, *aux)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+
+def _lowest_fit(placed, length):
+    """Lowest offset where `length` cells avoid every (off, len) in placed."""
+    off = 0
+    for lo, ln in sorted(placed):
+        if off + length <= lo:
+            break
+        off = max(off, lo + ln)
+    return off
+
+
+def _allocate_slots(intervals):
+    """Offline register-arena allocation over known live intervals.
+
+    `intervals`: {mreg: (length, def_pos, last_use)}.  Two greedy layouts
+    are computed - first-fit in definition order (good for the cascade's
+    mostly-nested lifetimes) and greedy-by-size (the ML-compiler heap-
+    simulator heuristic, better on ragged odd-split schedules) - and the
+    smaller extent wins.  On aligned power-of-two schedules (the serving
+    hot path) the extent equals the schedule's peak liveness exactly; odd
+    splits can fragment by at most a small slack (optimal dynamic storage
+    allocation can itself exceed peak liveness, so a slack-free bound is
+    not attainable in general) - both pinned by test_plan_properties.py.
+    """
+    def extent(offsets):
+        return max(o + intervals[m][0] for m, o in offsets.items())
+
+    def overlaps(m1, m2):
+        _, d1, u1 = intervals[m1]
+        _, d2, u2 = intervals[m2]
+        return not (u1 < d2 or u2 < d1)
+
+    layouts = []
+    for order in (
+            sorted(intervals, key=lambda m: (intervals[m][1], m)),
+            sorted(intervals, key=lambda m: (-intervals[m][0],
+                                             intervals[m][1], m))):
+        offsets = {}
+        for m in order:
+            placed = [(offsets[m2], intervals[m2][0])
+                      for m2 in offsets if overlaps(m, m2)]
+            offsets[m] = _lowest_fit(placed, intervals[m][0])
+        layouts.append(offsets)
+    return min(layouts, key=extent)
+
+
+def compile_arena(fin: FinalizedPlan) -> ArenaPlan:
+    """Lower a FinalizedPlan to its arena form (see DESIGN note).
+
+    Static analysis (views, live ranges, offsets) runs once per schedule
+    shape; the numeric work (batched explicit inversion, divisor folding)
+    is pure jnp, so `compile_arena` traces under jit/vmap like `finalize`.
+    """
+    schedule = fin.schedule
+    n_steps = len(schedule)
+
+    # --- pass 1: views, materialized registers, compute levels ------------
+    views = {0: ((fin.n, ((0, 0, 1),)),)}   # register -> view
+    mreg_len = {0: fin.n}                   # materialized reg -> length
+    mreg_def = {0: -1}                      # -> defining schedule position
+    computes = []                           # (pos, kind, payload, def_mreg)
+    next_mreg = 1
+    for p, instr in enumerate(schedule):
+        r, op = p + 1, instr[0]
+        if op == "slice":
+            _, src, lo, hi = instr
+            views[r] = _view_slice(views[src], lo, hi)
+        elif op == "add":
+            _, s1, r1, s2, r2 = instr
+            views[r] = _view_add(_view_scale(views[r1], s1),
+                                 _view_scale(views[r2], s2))
+        elif op == "catneg":
+            _, r1, r2 = instr
+            views[r] = views[r1] + _view_scale(views[r2], -1)
+        elif op == "inv":
+            _, bucket, idx, src = instr
+            m, next_mreg = next_mreg, next_mreg + 1
+            size = fin.lu_stacks[bucket][0].shape[-1]
+            mreg_len[m], mreg_def[m] = size, p
+            views[r] = ((size, ((m, 0, 1),)),)
+            computes.append((p, "inv", (bucket, idx, src), m))
+        elif op == "fmvm":
+            _, li, src = instr
+            lvl = fin.mvm_levels[li]
+            m, next_mreg = next_mreg, next_mreg + 1
+            out_len = sum(lvl.stacks[refs[0][0]].shape[-2]
+                          for refs in lvl.rows)
+            mreg_len[m], mreg_def[m] = out_len, p
+            views[r] = ((out_len, ((m, 0, 1),)),)
+            computes.append((p, "fmvm", (li, src), m))
+        else:  # pragma: no cover - finalize only emits the ops above
+            raise ValueError(f"unknown schedule op {op!r}")
+
+    # --- pass 2: per-compute input views (in mreg coordinates), last uses -
+    def note_uses(view, p, last_use):
+        for _, terms in view:
+            for m, _, _ in terms:
+                last_use[m] = max(last_use.get(m, mreg_def[m]), p)
+
+    last_use = {0: 0}
+    in_views = []       # per compute: view ("inv") or per-tile views ("fmvm")
+    for p, kind, payload, _ in computes:
+        if kind == "inv":
+            view = views[payload[2]]
+            note_uses(view, p, last_use)
+            in_views.append(view)
+        else:
+            li, src = payload
+            lvl = fin.mvm_levels[li]
+            tile_views = []
+            for refs in lvl.rows:
+                for g, i in refs:
+                    lo, hi = lvl.windows[g][i]
+                    tv = _view_slice(views[src], lo, hi)
+                    note_uses(tv, p, last_use)
+                    tile_views.append(tv)
+            in_views.append(tuple(tile_views))
+    out_view = views[n_steps]
+    note_uses(out_view, n_steps, last_use)
+    for m in mreg_def:                       # unread defs die immediately
+        last_use.setdefault(m, mreg_def[m])
+
+    # --- pass 3: offline allocation over the known live intervals ---------
+    intervals = {m: (mreg_len[m], mreg_def[m], last_use[m])
+                 for m in mreg_def}
+    offsets = _allocate_slots(intervals)
+    arena_size = max(offsets[m] + mreg_len[m] for m in mreg_def)
+    peak = max(
+        sum(mreg_len[m] for m in mreg_def
+            if mreg_def[m] <= p <= last_use[m])
+        for p in range(-1, n_steps + 1))
+
+    def segs(view):
+        """A view as static segments in (mreg, local_off, sign) terms."""
+        out, dst = [], 0
+        for chunk_len, terms in view:
+            out.append((dst, chunk_len, tuple(terms)))
+            dst += chunk_len
+        return tuple(out)
+
+    # --- pass 4: operator stacks (explicit inverses; sign/divisor folded) -
+    stacks = []
+    for lu, piv in fin.lu_stacks:
+        eye = jnp.eye(lu.shape[-1], dtype=lu.dtype)
+        stacks.append(-jax.vmap(
+            lambda l_, p_: jax.scipy.linalg.lu_solve((l_, p_), eye))(lu, piv))
+    mvm_stack_id = {}
+    for li, lvl in enumerate(fin.mvm_levels):
+        divs = lvl.divs if lvl.divs else (None,) * len(lvl.rows)
+        folded = [[None] * s.shape[-3] for s in lvl.stacks]
+        for refs, div in zip(lvl.rows, divs):
+            for g, i in refs:
+                w = -lvl.stacks[g][i]
+                if div is not None:
+                    w = w / div[:, None]
+                folded[g][i] = w
+        for g, tiles in enumerate(folded):
+            mvm_stack_id[(li, g)] = len(stacks)
+            stacks.append(jnp.stack(tiles))
+
+    # --- pass 5: levels (schedule order; slot-SSA + arena coordinates) ----
+    levels = []
+    for (p, kind, payload, m_out), in_view in zip(computes, in_views):
+        if kind == "inv":
+            bucket, idx, _ = payload
+            levels.append(((bucket, idx, m_out, 0, True, segs(in_view)),))
+        else:
+            li, _ = payload
+            lvl = fin.mvm_levels[li]
+            tiles, row_off, tv = [], 0, iter(in_view)
+            for refs in lvl.rows:
+                for pos, (g, i) in enumerate(refs):
+                    tiles.append((mvm_stack_id[(li, g)], i, m_out, row_off,
+                                  pos == 0, segs(next(tv))))
+                row_off += lvl.stacks[refs[0][0]].shape[-2]
+            levels.append(tuple(tiles))
+
+    def whole_window(tile):
+        sg = tile[5]
+        return len(sg) == 1 and sg[0][0] == 0 \
+            and sg[0][1] == stacks[tile[0]].shape[-1]
+
+    kernel_ok = all(whole_window(t) for level in levels for t in level)
+
+    # --- pass 6: uniform whole-schedule program ---------------------------
+    # When every tile of the cascade shares one (r, c) shape and reads
+    # whole-window gathers (true for the power-of-two serving configs: a
+    # two-stage 256^2 solve is 23 applications of 64x64 operators), the
+    # entire schedule lowers to ONE tile program: stacked operators in
+    # execution order plus flat arena-resolved metadata arrays - the form
+    # the Pallas megakernel runs as a single call, grid walking the tiles
+    # in schedule order over one physical arena buffer.  Mixed shapes /
+    # ragged windows fall back to the per-level form (program=None).
+    program = None
+    if kernel_ok and len({s.shape[-2:] for s in stacks}) == 1:
+        seq, offs_l, signs_l, outs_l, init_l = [], [], [], [], []
+        n_terms = max(len(t[5][0][2]) for level in levels for t in level)
+        for level in levels:
+            for sid, idx, m_out, out_local, init, segments in level:
+                terms = segments[0][2]
+                seq.append(stacks[sid][idx])
+                offs_l.append([offsets[m] + o for m, o, _ in terms]
+                              + [0] * (n_terms - len(terms)))
+                signs_l.append([float(s) for _, _, s in terms]
+                               + [0.0] * (n_terms - len(terms)))
+                outs_l.append(offsets[m_out] + out_local)
+                init_l.append(1 if init else 0)
+        program = (jnp.stack(seq), jnp.asarray(offs_l, jnp.int32),
+                   jnp.asarray(signs_l, jnp.float32),
+                   jnp.asarray(outs_l, jnp.int32),
+                   jnp.asarray(init_l, jnp.int32))
+
+    slot_offsets = tuple(offsets[m] for m in range(next_mreg))
+    slot_ranges = tuple(                     # indexed by materialized reg
+        (offsets[m], mreg_len[m], mreg_def[m], last_use[m])
+        for m in range(next_mreg))
+    return ArenaPlan(tuple(stacks), fin.scale, program, tuple(levels),
+                     segs(out_view), arena_size, fin.n, offsets[0], fin.cfg,
+                     kernel_ok, fin.num_arrays, slot_offsets, slot_ranges,
+                     peak)
+
+
+def _slot_gather(vals, segments):
+    """Signed static-window gather: the folded slice/add/catneg wiring.
+
+    Terms are evaluated in segment order, first term first - exactly the
+    reference executors' negation/summation order.
+    """
+    parts = []
+    for _, seg_len, terms in segments:
+        acc = None
+        for m, off, sign in terms:
+            w = vals[m][off:off + seg_len]
+            w = -w if sign < 0 else w
+            acc = w if acc is None else acc + w
+        parts.append(acc)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _apply_level_jnp(vals, stacks, level):
+    """One schedule level in slot-SSA form (the CPU fast path).
+
+    Each materialized register is its own value keyed by `slot_offsets`
+    slot id - same layout contract as the physical arena, but XLA assigns
+    the buffers, so level outputs never pay a whole-arena update copy.
+    Tile-row accumulation replays the schedule order (init starts a row
+    part, later tiles add into it); the row parts concatenate into the
+    level's output register.
+    """
+    parts, m_out = [], level[0][2]
+    for sid, idx, _, _, init, segments in level:
+        out = stacks[sid][idx] @ _slot_gather(vals, segments)
+        if init:
+            parts.append(out)
+        else:
+            parts[-1] = parts[-1] + out
+    vals[m_out] = parts[0] if len(parts) == 1 else jnp.concatenate(parts,
+                                                                   axis=0)
+
+
+def _apply_level_kernel(arena, ap, level, interpret):
+    """One schedule level on the physical arena via the Pallas megakernel.
+
+    Tiles are grouped by operator stack (shape bucket), one pallas_call
+    per group; metadata resolves to arena coordinates via `slot_offsets`.
+    """
+    from repro.kernels import ops as kops
+    so = ap.slot_offsets
+    groups = {}
+    for tile in level:
+        groups.setdefault(tile[0], []).append(tile)
+    for sid, tiles in groups.items():
+        n_terms = max(len(t[5][0][2]) for t in tiles)
+        offs = [[so[m] + o for m, o, _ in t[5][0][2]] for t in tiles]
+        signs = [[float(s) for _, _, s in t[5][0][2]] for t in tiles]
+        for o, s in zip(offs, signs):       # pad ragged term counts
+            o.extend([0] * (n_terms - len(o)))
+            s.extend([0.0] * (n_terms - len(s)))
+        stack = ap.stacks[sid]
+        ops_used = stack[jnp.asarray([t[1] for t in tiles], jnp.int32)]
+        arena = kops.arena_level_apply(
+            arena, ops_used,
+            jnp.asarray(offs, jnp.int32), jnp.asarray(signs, jnp.float32),
+            jnp.asarray([so[t[2]] + t[3] for t in tiles], jnp.int32),
+            jnp.asarray([1 if t[4] else 0 for t in tiles], jnp.int32),
+            interpret=interpret)
+    return arena
+
+
+def execute_arena(ap: ArenaPlan, b: jnp.ndarray,
+                  use_kernel: Optional[bool] = None) -> jnp.ndarray:
+    """Run an arena plan; returns x like the other executors.
+
+    `b` may be (n,) or (n, k).  Every level is a stacked-tile matmul over
+    signed static gather windows - no register list, no runtime factor
+    solves, no wiring copies.  use_kernel=None routes through the Pallas
+    megakernel on TPU (when the plan's gather specs are whole-window,
+    `ap.kernel_ok`) and the slot-SSA jnp path on CPU; use_kernel=True
+    forces the kernel (interpret mode off TPU - the CI smoke), False
+    forces jnp.  On the kernel path a uniform plan (`ap.program`) runs
+    the ENTIRE cascade as one megakernel call over the physical arena
+    buffer - the single-dispatch serving form.
+    """
+    cfg = ap.cfg
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu and ap.kernel_ok
+    elif use_kernel and not ap.kernel_ok:
+        # forcing the kernel on a plan it cannot express must fail loudly:
+        # silently measuring/testing the jnp path as "the kernel" is worse
+        raise ValueError(
+            "use_kernel=True but this plan has ragged (multi-segment) "
+            "gather windows the megakernel does not express; use the jnp "
+            "path or an aligned power-of-two configuration")
+    single = b.ndim == 1
+    dtype = jnp.result_type(b.dtype, ap.scale.dtype)
+    # Always carry an explicit RHS-batch dim: a trailing batch of 1 costs
+    # nothing, while 1-D update chains defeat XLA:CPU buffer reuse.
+    bk = b[:, None] if single else b
+    b_in = analog.dac(bk, cfg).astype(dtype)
+    if use_kernel:
+        arena = jnp.zeros((ap.arena_size,) + bk.shape[1:], dtype)
+        arena = arena.at[ap.in_off:ap.in_off + ap.n].set(b_in)
+        if ap.program is not None:
+            # the whole cascade in ONE megakernel call (the grid walks
+            # tiles in schedule order; the arena carries level outputs)
+            from repro.kernels import ops as kops
+            ops_seq, in_offs, in_signs, out_offs, out_init = ap.program
+            arena = kops.arena_level_apply(
+                arena, ops_seq, in_offs, in_signs, out_offs, out_init,
+                interpret=not on_tpu)
+        else:
+            for level in ap.levels:
+                arena = _apply_level_kernel(arena, ap, level,
+                                            interpret=not on_tpu)
+        so = ap.slot_offsets
+        out_spec = tuple(
+            (dst, ln, tuple((0, so[m] + off, sign) for m, off, sign in terms))
+            for dst, ln, terms in ap.out_spec)
+        out = _slot_gather({0: arena}, out_spec)
+    else:
+        vals = {0: b_in}
+        for level in ap.levels:
+            _apply_level_jnp(vals, ap.stacks, level)
+        out = _slot_gather(vals, ap.out_spec)
+    if single:
+        out = out[:, 0]
+    return -ap.scale * analog.adc(out, cfg)
+
+
+_execute_arena = jax.jit(execute_arena, static_argnames=("use_kernel",))
+_execute_arena_donated = jax.jit(execute_arena, donate_argnums=(1,),
+                                 static_argnames=("use_kernel",))
+
+
+def pad_rhs_pow2(bs: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Zero-pad an (n, k) rhs batch to the next power-of-two k.
+
+    The one padding policy of the serving layer (ProgrammedSolver.solve_many
+    and SolverService's refined flush both route through it): jitted
+    executors then compile at most one new batch shape per doubling instead
+    of one per distinct queue length.  Returns (padded batch, original k);
+    slice the result back with `[:, :k]`.
+    """
+    k = bs.shape[1]
+    k_pad = 1 << (k - 1).bit_length() if k else 0
+    if k_pad > k:
+        bs = jnp.pad(bs, ((0, 0), (0, k_pad - k)))
+    return bs, k
+
+
 class ProgrammedSolver:
     """Program-once / solve-many handle over one finalized matrix.
 
     The AMC serving abstraction: `program` pays the full programming-time
     cost (partitioning, Schur complements, conductance mapping, operator
-    finalization) exactly once; `solve` / `solve_many` then stream any
-    number of right-hand sides against the programmed arrays at marginal
-    cost.  All solves dispatch through one shared jitted executor keyed on
-    the plan's pytree structure, so repeated solves never re-trace.
+    finalization and arena compilation) exactly once; `solve` /
+    `solve_many` then stream any number of right-hand sides against the
+    programmed arrays at marginal cost.  All solves dispatch through one
+    shared jitted executor keyed on the plan's pytree structure, so
+    repeated solves never re-trace; `solve_many` pads the batch dim to the
+    next power of two, so distinct queue lengths never re-trace either.
+
+    `mode` selects the executor (overridable per call): "fused" (default)
+    runs the arena-form single-dispatch executor - the serving fast path -
+    while "reference" runs the finalized schedule that is pinned
+    bit-for-bit against `execute_flat` (TESTING.md four-way contract).
     """
 
-    def __init__(self, fin: FinalizedPlan):
+    def __init__(self, fin: FinalizedPlan, arena: Optional[ArenaPlan] = None,
+                 mode: str = "fused"):
+        if mode not in ("reference", "fused"):
+            raise ValueError(f"mode must be 'reference' or 'fused', "
+                             f"got {mode!r}")
         self._fin = fin
+        # arena compilation (explicit bucket inversions + layout analysis)
+        # is paid at programming time for fused-mode solvers and lazily on
+        # first fused use otherwise - reference-mode callers never pay it.
+        self._arena = arena
+        if self._arena is None and mode == "fused":
+            self._arena = compile_arena(fin)
+        self._mode = mode
 
     @classmethod
     def program(cls, a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
-                stages: Optional[int] = None) -> "ProgrammedSolver":
+                stages: Optional[int] = None,
+                mode: str = "fused") -> "ProgrammedSolver":
         """Full programming flow for matrix A (one noise draw)."""
-        return cls.from_plan(build_plan(a, key, cfg, stages), cfg)
+        return cls.from_plan(build_plan(a, key, cfg, stages), cfg, mode=mode)
 
     @classmethod
-    def from_plan(cls, plan: Union[SolvePlan, FlatPlan],
-                  cfg: AnalogConfig) -> "ProgrammedSolver":
+    def from_plan(cls, plan: Union[SolvePlan, FlatPlan], cfg: AnalogConfig,
+                  mode: str = "fused") -> "ProgrammedSolver":
         """Finalize an already-built plan (recursive or flat)."""
         fplan = plan if isinstance(plan, FlatPlan) else compile_plan(plan)
-        return cls(finalize(fplan, cfg))
+        return cls(finalize(fplan, cfg), mode=mode)
 
     @property
     def finalized(self) -> FinalizedPlan:
         return self._fin
+
+    @property
+    def arena(self) -> ArenaPlan:
+        if self._arena is None:
+            self._arena = compile_arena(self._fin)
+        return self._arena
+
+    @property
+    def mode(self) -> str:
+        return self._mode
 
     @property
     def cfg(self) -> AnalogConfig:
@@ -794,27 +1366,52 @@ class ProgrammedSolver:
     def num_arrays(self) -> int:
         return self._fin.num_arrays
 
-    def solve(self, b: jnp.ndarray, jit: bool = True) -> jnp.ndarray:
+    def solve(self, b: jnp.ndarray, jit: bool = True,
+              mode: Optional[str] = None) -> jnp.ndarray:
         """Solve A x = b for one (n,) rhs or an (n, k) batch.
 
-        jit=False runs the schedule eagerly - op for op the same numbers as
-        `execute_flat`, bit-for-bit on CPU (the equivalence contract).  The
-        default jitted path lets XLA merge each level's same-shape tile dots,
-        which reassociates final-ulp rounding (float-tolerance equal).
+        mode=None uses the solver's default.  In "reference" mode,
+        jit=False runs the finalized schedule eagerly - op for op the same
+        numbers as `execute_flat`, bit-for-bit on CPU (the equivalence
+        contract); the jitted path lets XLA merge each level's same-shape
+        tile dots (float-tolerance equal).  "fused" mode runs the arena
+        executor - float-tolerance against the reference by design (see
+        the DESIGN note).
         """
-        return (_execute_finalized if jit else execute_finalized)(
-            self._fin, b)
+        mode = self._mode if mode is None else mode
+        if mode == "reference":
+            return (_execute_finalized if jit else execute_finalized)(
+                self._fin, b)
+        return (_execute_arena if jit else execute_arena)(self.arena, b)
 
-    def solve_many(self, bs: jnp.ndarray, donate: bool = False) -> jnp.ndarray:
+    def solve_many(self, bs: jnp.ndarray, donate: bool = False,
+                   mode: Optional[str] = None,
+                   pad_to_pow2: bool = True) -> jnp.ndarray:
         """Solve an (n, k) batch of right-hand sides in one fused call.
 
-        donate=True donates the rhs buffer to the computation - opt in from
-        serving hot loops that never reuse bs after the call (XLA then
-        aliases it for the output on backends that support donation; it is
-        a no-op on CPU).  The default keeps bs valid for the caller.
+        pad_to_pow2=True (default) zero-pads the batch dim to the next
+        power of two before dispatch and slices the padding away after, so
+        the jitted executor compiles at most one new shape per doubling
+        instead of one per distinct k (serving queues flush at arbitrary
+        lengths).  donate=True donates the rhs buffer to the computation -
+        opt in from serving hot loops that never reuse bs after the call
+        (XLA then aliases it for the output on backends that support
+        donation; a no-op on CPU).
         """
-        fn = _execute_finalized_donated if donate else _execute_finalized
-        return fn(self._fin, bs)
+        k = bs.shape[1]
+        if k == 0:
+            return jnp.zeros_like(bs)
+        if pad_to_pow2:
+            bs, k = pad_rhs_pow2(bs)
+        k_pad = bs.shape[1]
+        mode = self._mode if mode is None else mode
+        if mode == "reference":
+            fn = _execute_finalized_donated if donate else _execute_finalized
+            xs = fn(self._fin, bs)
+        else:
+            fn = _execute_arena_donated if donate else _execute_arena
+            xs = fn(self.arena, bs)
+        return xs[:, :k] if k_pad > k else xs
 
 
 # ---------------------------------------------------------------------------
@@ -822,17 +1419,28 @@ class ProgrammedSolver:
 # ---------------------------------------------------------------------------
 
 def _mc_execute(parts: PartitionedSystem, b: jnp.ndarray, keys: jax.Array,
-                cfg: AnalogConfig) -> jnp.ndarray:
-    """Per-key program + compile + flat execute, vmapped over noise keys."""
+                cfg: AnalogConfig, mode: str = "reference") -> jnp.ndarray:
+    """Per-key program + compile + execute, vmapped over noise keys.
+
+    mode="reference" runs `execute_flat` per key (the accuracy-study path,
+    bit-compatible with the recursive reference); mode="fused" finalizes
+    and arena-compiles each key's plan inside the vmap and runs the arena
+    executor - the serving-form Monte-Carlo sweep.
+    """
+    if mode == "fused":
+        def one(k):
+            fplan = compile_plan(program_system(parts, k, cfg))
+            return execute_arena(compile_arena(finalize(fplan, cfg)), b)
+        return jax.vmap(one)(keys)
     fplans = jax.vmap(lambda k: compile_plan(program_system(parts, k, cfg)))(
         keys)
     return jax.vmap(lambda fp: execute_flat(fp, b, cfg))(fplans)
 
 
-@partial(jax.jit, static_argnames=("cfg", "stages"))
+@partial(jax.jit, static_argnames=("cfg", "stages", "mode"))
 def solve_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
-                  cfg: AnalogConfig, stages: Optional[int] = None
-                  ) -> jnp.ndarray:
+                  cfg: AnalogConfig, stages: Optional[int] = None,
+                  mode: str = "reference") -> jnp.ndarray:
     """Batched Monte-Carlo BlockAMC solve in one jit.
 
     The key-independent digital pre-processing (partitioning, Schur
@@ -840,6 +1448,9 @@ def solve_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
     `partition_system` and traced exactly once; only conductance mapping,
     noise draws and the cascade itself are vmapped over keys, so each
     schedule level is one batched solve/matmul over (num_keys, ...) stacks.
+    mode="fused" routes each key through the arena executor instead of
+    `execute_flat` (float-tolerance; default keeps the reference path so
+    the paper accuracy sweeps stay bit-stable).
 
     Args:
       a:    (n, n) system matrix.
@@ -849,13 +1460,13 @@ def solve_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
       (num_keys, n) or (num_keys, n, k) solutions.
     """
     parts = partition_system(a, cfg, stages)
-    return _mc_execute(parts, b, keys, cfg)
+    return _mc_execute(parts, b, keys, cfg, mode)
 
 
-@partial(jax.jit, static_argnames=("cfg", "mesh", "axis_name"))
+@partial(jax.jit, static_argnames=("cfg", "mesh", "axis_name", "mode"))
 def _sharded_mc_executor(parts: PartitionedSystem, b: jnp.ndarray,
                          keys: jax.Array, cfg: AnalogConfig, mesh,
-                         axis_name: str) -> jnp.ndarray:
+                         axis_name: str, mode: str) -> jnp.ndarray:
     """shard_map executor; cfg/mesh/axis are static so jit caches per combo."""
     from jax.experimental.shard_map import shard_map
 
@@ -863,21 +1474,23 @@ def _sharded_mc_executor(parts: PartitionedSystem, b: jnp.ndarray,
 
     in_specs, out_specs = mc_solve_specs(axis_name)
     mapped = shard_map(
-        lambda p, bb, kk: _mc_execute(p, bb, kk, cfg),
+        lambda p, bb, kk: _mc_execute(p, bb, kk, cfg, mode),
         mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
     return mapped(parts, b, keys)
 
 
 def solve_batched_sharded(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
                           cfg: AnalogConfig, stages: Optional[int] = None,
-                          mesh=None, axis_name: str = "mc") -> jnp.ndarray:
+                          mesh=None, axis_name: str = "mc",
+                          mode: str = "reference") -> jnp.ndarray:
     """`solve_batched` with the Monte-Carlo key axis sharded over a mesh.
 
     Each device programs and solves its own shard of noise keys; the system
     matrix, partitioned pre-processing and right-hand sides are replicated.
     With mesh=None a 1-D mesh over all local devices is built via
     `repro.launch.mesh.make_mc_mesh`.  num_keys must divide evenly over the
-    mesh axis.
+    mesh axis.  mode="fused" runs each shard's keys through the arena
+    executor (same flag as `solve_batched`).
     """
     if mesh is None:
         from repro.launch.mesh import make_mc_mesh
@@ -888,7 +1501,7 @@ def solve_batched_sharded(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
             f"num_keys={keys.shape[0]} must divide over the "
             f"{axis_name!r} mesh axis of size {n_shards}")
     parts = partition_system(a, cfg, stages)
-    return _sharded_mc_executor(parts, b, keys, cfg, mesh, axis_name)
+    return _sharded_mc_executor(parts, b, keys, cfg, mesh, axis_name, mode)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

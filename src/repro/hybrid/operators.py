@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import blockamc
 from repro.core.analog import AnalogConfig
-from repro.core.blockamc import FinalizedPlan
+from repro.core.blockamc import ArenaPlan, FinalizedPlan
 
 
 def matvec_from_dense(a: jnp.ndarray) -> Callable[[jnp.ndarray], jnp.ndarray]:
@@ -44,35 +44,50 @@ class AnalogPreconditioner:
 
     Wraps one `FinalizedPlan` (program-once form of a BlockAMC cascade) and
     applies it to `(..., n)` inputs: one analog solve per trailing vector,
-    all leading axes batched through the finalized executor's multi-RHS
-    path.  Because the plan is finalized, every application is pure batched
+    all leading axes batched through the executor's multi-RHS path.
+    Because the plan is finalized, every application is pure batched
     `lu_solve`s / stacked matmuls - the marginal-cost analog solve the
     paper's cost model promises, which is what makes it affordable *inside*
     a Krylov iteration.
+
+    `mode` picks the executor for the inner-loop apply: "fused" (default)
+    runs the arena-form single-dispatch executor (core/blockamc.py DESIGN
+    note) - the serving fast path - and "reference" the finalized schedule
+    it is float-tolerance-pinned against (TESTING.md four-way contract).
     """
 
-    def __init__(self, fin: FinalizedPlan):
+    def __init__(self, fin: FinalizedPlan,
+                 aplan: Optional[ArenaPlan] = None, mode: str = "fused"):
         self.fin = fin
+        self.mode = mode
+        if aplan is None and mode == "fused":
+            aplan = blockamc.compile_arena(fin)
+        self.aplan = aplan
 
     def tree_flatten(self):
-        return (self.fin,), None
+        return (self.fin, self.aplan), (self.mode,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0])
+        obj = cls.__new__(cls)
+        obj.fin, obj.aplan = children
+        obj.mode = aux[0]
+        return obj
 
     @classmethod
     def program(cls, a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
-                stages: Optional[int] = None) -> "AnalogPreconditioner":
+                stages: Optional[int] = None,
+                mode: str = "fused") -> "AnalogPreconditioner":
         """Full programming flow: partition, Schur, map + noise, finalize."""
         fplan = blockamc.compile_plan(blockamc.build_plan(a, key, cfg, stages))
-        return cls(blockamc.finalize(fplan, cfg))
+        return cls(blockamc.finalize(fplan, cfg), mode=mode)
 
     @classmethod
     def from_solver(cls, solver: "blockamc.ProgrammedSolver"
                     ) -> "AnalogPreconditioner":
-        """Share an already-programmed `ProgrammedSolver`'s finalized plan."""
-        return cls(solver.finalized)
+        """Share an already-programmed `ProgrammedSolver`'s plans + mode."""
+        aplan = solver.arena if solver.mode == "fused" else None
+        return cls(solver.finalized, aplan=aplan, mode=solver.mode)
 
     @property
     def n(self) -> int:
@@ -87,16 +102,21 @@ class AnalogPreconditioner:
         """The analog substrate's dtype (set when the plan was built)."""
         return self.fin.scale.dtype
 
+    def _execute(self, cols: jnp.ndarray) -> jnp.ndarray:
+        """One executor dispatch on (n,) / (n, k) columns (mode-routed)."""
+        if self.mode == "fused" and self.aplan is not None:
+            return blockamc.execute_arena(self.aplan, cols)
+        return blockamc.execute_finalized(self.fin, cols)
+
     def __call__(self, v: jnp.ndarray) -> jnp.ndarray:
         """Apply M ~ A^-1 to (..., n); returns (..., n) in v's dtype."""
         n = self.fin.n
         if v.ndim == 1:
-            out = blockamc.execute_finalized(self.fin,
-                                             v.astype(self.compute_dtype))
+            out = self._execute(v.astype(self.compute_dtype))
             return out.astype(v.dtype)
         lead = v.shape[:-1]
         cols = v.reshape((-1, n)).T.astype(self.compute_dtype)  # (n, k)
-        out = blockamc.execute_finalized(self.fin, cols)
+        out = self._execute(cols)
         return out.T.reshape(lead + (n,)).astype(v.dtype)
 
     # LinearOperator-flavoured alias

@@ -91,12 +91,14 @@ def solve_refined(a: jnp.ndarray, b: jnp.ndarray,
 
 def _refined_mc(a: jnp.ndarray, parts: PartitionedSystem, bt: jnp.ndarray,
                 keys: jax.Array, cfg: AnalogConfig, method: str, tol: float,
-                maxiter: int, restart: int, use_precond: bool):
+                maxiter: int, restart: int, use_precond: bool,
+                mode: str = "fused"):
     """Program + finalize + refine per noise key, vmapped over keys."""
 
     def one(k):
         fplan = blockamc.compile_plan(blockamc.program_system(parts, k, cfg))
-        precond = AnalogPreconditioner(blockamc.finalize(fplan, cfg))
+        precond = AnalogPreconditioner(blockamc.finalize(fplan, cfg),
+                                       mode=mode)
         return _refine(a, bt, precond, method, tol, maxiter, restart,
                        use_precond)
 
@@ -104,37 +106,40 @@ def _refined_mc(a: jnp.ndarray, parts: PartitionedSystem, bt: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("cfg", "method", "tol", "maxiter",
-                                   "restart", "use_precond"))
+                                   "restart", "use_precond", "mode"))
 def _refined_mc_jit(a, parts, bt, keys, cfg, method, tol, maxiter, restart,
-                    use_precond):
+                    use_precond, mode):
     return _refined_mc(a, parts, bt, keys, cfg, method, tol, maxiter,
-                       restart, use_precond)
+                       restart, use_precond, mode)
 
 
 def solve_refined_batched(a: jnp.ndarray, b: jnp.ndarray, keys: jax.Array,
                           cfg: AnalogConfig, *, stages: Optional[int] = None,
                           method: str = "cg", tol: float = 1e-10,
                           maxiter: int = 400, restart: int = 32,
-                          use_precond: bool = True) -> KrylovResult:
+                          use_precond: bool = True,
+                          mode: str = "fused") -> KrylovResult:
     """Monte-Carlo hybrid solve: one refined solve per noise key, one jit.
 
     Every key programs its own noisy preconditioner (key-independent digital
     pre-processing hoisted via `partition_system`) and refines the same
     right-hand sides.  Returns a KrylovResult with a leading (num_keys, ...)
     axis on every field; `b` may be (n,) or (n, k) (x comes back as
-    (num_keys, n) / (num_keys, k, n)).
+    (num_keys, n) / (num_keys, k, n)).  `mode` picks the seed/
+    preconditioner executor ("fused" arena default / "reference").
     """
     parts = blockamc.partition_system(a, cfg, stages)
     bt = (b if b.ndim == 1 else b.T).astype(a.dtype)
     return _refined_mc_jit(a, parts, bt, keys, cfg, method, float(tol),
-                           int(maxiter), int(restart), bool(use_precond))
+                           int(maxiter), int(restart), bool(use_precond),
+                           mode)
 
 
 @partial(jax.jit, static_argnames=("cfg", "method", "tol", "maxiter",
                                    "restart", "use_precond", "mesh",
-                                   "axis_name"))
+                                   "axis_name", "mode"))
 def _refined_mc_sharded(a, parts, bt, keys, cfg, method, tol, maxiter,
-                        restart, use_precond, mesh, axis_name):
+                        restart, use_precond, mesh, axis_name, mode):
     from jax.experimental.shard_map import shard_map
 
     from repro.sharding.partition import mc_refined_specs
@@ -142,7 +147,8 @@ def _refined_mc_sharded(a, parts, bt, keys, cfg, method, tol, maxiter,
     in_specs, out_specs = mc_refined_specs(axis_name)
     mapped = shard_map(
         lambda aa, pp, bb, kk: _refined_mc(aa, pp, bb, kk, cfg, method, tol,
-                                           maxiter, restart, use_precond),
+                                           maxiter, restart, use_precond,
+                                           mode),
         mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
     return mapped(a, parts, bt, keys)
 
@@ -153,7 +159,8 @@ def solve_refined_batched_sharded(a: jnp.ndarray, b: jnp.ndarray,
                                   method: str = "cg", tol: float = 1e-10,
                                   maxiter: int = 400, restart: int = 32,
                                   use_precond: bool = True, mesh=None,
-                                  axis_name: str = "mc") -> KrylovResult:
+                                  axis_name: str = "mc",
+                                  mode: str = "fused") -> KrylovResult:
     """`solve_refined_batched` with the noise-key axis sharded over a mesh.
 
     Each device programs and refines its own shard of noisy preconditioners;
@@ -173,4 +180,4 @@ def solve_refined_batched_sharded(a: jnp.ndarray, b: jnp.ndarray,
     bt = (b if b.ndim == 1 else b.T).astype(a.dtype)
     return _refined_mc_sharded(a, parts, bt, keys, cfg, method, float(tol),
                                int(maxiter), int(restart), bool(use_precond),
-                               mesh, axis_name)
+                               mesh, axis_name, mode)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the compute hot-spots:
 
   crossbar_mvm - differential analog crossbar MVM simulation (DAC/ADC fused)
+  arena_mvm    - arena-executor level megakernel (stacked tiles over one
+                 register arena; signs/divisors folded, DAC/ADC fused)
   schur_gemm   - fused Schur-complement update A4 - A3 @ W
 
 Use repro.kernels.ops for the public (padded, jit'd) entry points and

@@ -1,0 +1,134 @@
+"""Pallas level-megakernel for the arena-form BlockAMC executor.
+
+One call executes one schedule-level group of the arena executor
+(`repro.core.blockamc.execute_arena`): a stack of same-shape tiles, each
+applying its precomputed operator (explicit INV inverse or sign/divisor-
+folded MVM tile - see the DESIGN note in core/blockamc.py) to a signed sum
+of static arena windows, writing or accumulating into its output window.
+This generalises `crossbar_mvm_batched` from one conductance stack driving
+private per-array inputs to shape-bucketed ragged tiles reading and writing
+one shared register arena:
+
+    v_t   = sum_j signs[t, j] * arena[in_offs[t, j] : in_offs[t, j] + C]
+    out_t = ADC(ops[t] @ DAC(v_t))                      # (R, K) on the MXU
+    arena[out_offs[t] : out_offs[t] + R] {=, +=} out_t  # init flag per tile
+
+The leading grid axis walks the tiles of the group (each operator tile
+streams HBM->VMEM once); the arena lives in one unblocked buffer revisited
+by every step, so row-partial accumulation across the tiles of one MVM
+tile-row happens in-place, in the schedule's order.  Signs, the summing-node
+divisor and the circuit minus are folded into `ops` at arena-compile time;
+DAC/ADC quantisation is fused into the tile loop exactly as in
+`crossbar_mvm.py` (ideal converters by default - the cascade quantises once
+at the input and once at the output, not per level).
+
+On TPU the metadata arrays (offsets, signs, init flags) ride in SMEM so
+the dynamic window starts are scalar reads, and the dot hits the MXU;
+`interpret=True` (the CPU CI smoke) executes the same body in Python per
+grid step.  TPU alignment note: tile shapes and the RHS-batch dim follow
+the usual (8, 128) f32 tiling; the `ops.arena_level_apply` wrapper pads
+the batch dim, and arena offsets of production plans are multiples of the
+leaf array size (64+ on paper configs).  Compiled-mode lowering has not
+been exercised in this CPU-only container (same status as the other
+kernels in this package): interpret-mode parity is the tested contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; absent/unused on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+    _SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover - CPU container fallback
+    _SMEM = None
+
+# The one converter model (pure jnp, so it traces inside the kernel body).
+from repro.core.quantization import quantize as _quantize
+
+
+def _arena_level_kernel(in_offs_ref, in_signs_ref, out_offs_ref,
+                        out_init_ref, ops_ref, arena_ref, out_ref, *,
+                        rows: int, cols: int, n_terms: int,
+                        dac_bits: int | None, adc_bits: int | None,
+                        fullscale: float):
+    t = pl.program_id(0)
+
+    # Carry the untouched arena cells through: the output buffer is the
+    # arena, and only this level's output windows may change.  (With the
+    # wrapper's input/output aliasing this lowers to a no-op self-copy.)
+    @pl.when(t == 0)
+    def _carry():
+        out_ref[...] = arena_ref[...]
+
+    # Signed static-window gather (the folded slice/add/catneg wiring).
+    # Reads go through out_ref so tiles see this level's in-order writes
+    # never needed for correctness (inputs and outputs of one level are
+    # disjoint by construction) but required when the buffers alias.
+    v = jnp.zeros((cols, out_ref.shape[1]), jnp.float32)
+    for j in range(n_terms):                       # static unroll
+        off = in_offs_ref[t, j]
+        v = v + in_signs_ref[t, j] * out_ref[pl.ds(off, cols), :]
+    v = _quantize(v, dac_bits, fullscale)
+
+    # (R, C) x (C, K) -> (R, K) on the MXU; sign/divisor pre-folded in ops.
+    out = jax.lax.dot_general(
+        ops_ref[0], v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out = _quantize(out, adc_bits, fullscale)
+
+    o = out_offs_ref[t]
+
+    @pl.when(out_init_ref[t] == 1)
+    def _set():
+        out_ref[pl.ds(o, rows), :] = out
+
+    @pl.when(out_init_ref[t] == 0)
+    def _accumulate():
+        out_ref[pl.ds(o, rows), :] += out
+
+
+def arena_level_apply(arena: jnp.ndarray, ops: jnp.ndarray,
+                      in_offs: jnp.ndarray, in_signs: jnp.ndarray,
+                      out_offs: jnp.ndarray, out_init: jnp.ndarray, *,
+                      dac_bits: int | None = None,
+                      adc_bits: int | None = None, fullscale: float = 1.0,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Apply one arena level group; returns the updated arena.
+
+    Args:
+      arena:    (S, K) f32 register arena (K = RHS batch).
+      ops:      (L, R, C) operator tiles (sign/divisor folded).
+      in_offs:  (L, T) int32 arena offsets of each tile's input windows.
+      in_signs: (L, T) f32 signs (+1/-1; 0 pads unused term slots).
+      out_offs: (L,) int32 output window offsets.
+      out_init: (L,) int32; 1 = first write of its window, 0 = accumulate.
+    """
+    s, k = arena.shape
+    l, rows, cols = ops.shape
+    assert in_offs.shape == in_signs.shape == (l, in_offs.shape[1])
+    assert out_offs.shape == out_init.shape == (l,)
+    n_terms = in_offs.shape[1]
+    kernel = functools.partial(
+        _arena_level_kernel, rows=rows, cols=cols, n_terms=n_terms,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale)
+    # metadata lives in SMEM on TPU (dynamic-slice starts must be scalar
+    # reads); interpret mode ignores memory spaces
+    smem = {} if interpret or _SMEM is None else {"memory_space": _SMEM}
+    meta = pl.BlockSpec(in_offs.shape, lambda t: (0, 0), **smem)
+    flat = pl.BlockSpec((l,), lambda t: (0,), **smem)
+    whole = pl.BlockSpec((s, k), lambda t: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(l,),
+        in_specs=[meta, meta, flat, flat,
+                  pl.BlockSpec((1, rows, cols), lambda t: (t, 0, 0)),
+                  whole],
+        out_specs=whole,
+        out_shape=jax.ShapeDtypeStruct((s, k), jnp.float32),
+        input_output_aliases={5: 0},     # the arena updates in place
+        interpret=interpret,
+    )(in_offs, in_signs, out_offs, out_init, ops, arena)

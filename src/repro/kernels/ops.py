@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import arena_mvm as _arena
 from repro.kernels import crossbar_mvm as _xbar
 from repro.kernels import schur_gemm as _schur
 
@@ -73,6 +74,33 @@ def crossbar_mvm_batched(v, gpos, gneg, *, g0: float, dac_bits=None,
                                      adc_bits=adc_bits, fullscale=fullscale,
                                      interpret=interpret)
     return out[:, :b, :r]
+
+
+@partial(jax.jit, static_argnames=("dac_bits", "adc_bits", "fullscale",
+                                   "interpret"))
+def arena_level_apply(arena, ops, in_offs, in_signs, out_offs, out_init, *,
+                      dac_bits=None, adc_bits=None, fullscale: float = 1.0,
+                      interpret: bool | None = None):
+    """One arena level group (see kernels/arena_mvm.py); returns the arena.
+
+    arena: (S, K), ops: (L, R, C), metadata per tile.  The RHS batch dim K
+    is padded to the f32 lane width and sliced back; S and the tile dims
+    are used as-is (arena offsets are byte positions in the register file -
+    padding them would shift every window).  The kernel computes in f32
+    (like every kernel in this package); the result is cast back to the
+    arena's dtype so the caller's executor dtype is stable - under x64,
+    accuracy is capped at f32 on this path (the jnp path keeps f64).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    s, k = arena.shape
+    blk = 128
+    ap = _pad_to(arena.astype(jnp.float32), (1, blk))
+    out = _arena.arena_level_apply(
+        ap, ops.astype(jnp.float32), in_offs, in_signs, out_offs, out_init,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale,
+        interpret=interpret)
+    return out[:, :k].astype(arena.dtype)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -15,6 +15,28 @@ def crossbar_mvm_ref(v, gpos, gneg, *, g0, dac_bits=None, adc_bits=None,
     return _quantize(out, adc_bits, fullscale)
 
 
+def arena_level_ref(arena, ops, in_offs, in_signs, out_offs, out_init, *,
+                    dac_bits=None, adc_bits=None, fullscale=1.0):
+    """Oracle for the arena level-megakernel (kernels/arena_mvm.py).
+
+    Sequential tile loop over one level group: signed whole-window gather,
+    operator apply, init-or-accumulate into the output window.
+    """
+    arena = arena.astype(jnp.float32)
+    l, rows, cols = ops.shape
+    for t in range(l):
+        v = jnp.zeros((cols, arena.shape[1]), jnp.float32)
+        for j in range(in_offs.shape[1]):
+            off = int(in_offs[t, j])
+            v = v + in_signs[t, j] * arena[off:off + cols]
+        v = _quantize(v, dac_bits, fullscale)
+        out = _quantize(ops[t].astype(jnp.float32) @ v, adc_bits, fullscale)
+        o = int(out_offs[t])
+        tgt = arena.at[o:o + rows]
+        arena = tgt.set(out) if int(out_init[t]) else tgt.add(out)
+    return arena
+
+
 def schur_update_ref(a4, a3, w):
     """A4 - A3 @ W in f32."""
     return a4.astype(jnp.float32) - a3.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.analog import AnalogConfig
-from repro.core.blockamc import ProgrammedSolver
+from repro.core.blockamc import ProgrammedSolver, pad_rhs_pow2
 from repro.hybrid import AnalogPreconditioner, solve_refined as _solve_refined
 
 
@@ -38,14 +38,19 @@ class SolverService:
     """Program-once / solve-many front end over `ProgrammedSolver`.
 
     `program` pays the full programming cost (partition, Schur complements,
-    conductance mapping, operator finalization and the first jit) exactly
-    once per matrix; `solve` answers immediately; `submit` + `flush` batch
-    queued right-hand sides into one fused multi-RHS solve.
+    conductance mapping, operator finalization, arena compilation and the
+    first jit) exactly once per matrix; `solve` answers immediately;
+    `submit` + `flush` batch queued right-hand sides into one fused
+    multi-RHS solve.  mode="fused" (default) serves from the arena-form
+    single-dispatch executor; mode="reference" keeps the finalized
+    schedule (TESTING.md four-way contract).
     """
 
-    def __init__(self, cfg: AnalogConfig, stages: Optional[int] = None):
+    def __init__(self, cfg: AnalogConfig, stages: Optional[int] = None,
+                 mode: str = "fused"):
         self.cfg = cfg
         self.stages = stages
+        self.mode = mode   # "fused" arena executor (default) / "reference"
         self._solvers: Dict[str, ProgrammedSolver] = {}
         self._dense: Dict[str, jnp.ndarray] = {}
         self._queues: Dict[str, List[jnp.ndarray]] = {}
@@ -68,10 +73,12 @@ class SolverService:
                 f"pending rhs; flush before re-programming")
         key = key if key is not None else jax.random.PRNGKey(0)
         t0 = time.perf_counter()
-        solver = ProgrammedSolver.program(a, key, self.cfg, self.stages)
+        solver = ProgrammedSolver.program(a, key, self.cfg, self.stages,
+                                          mode=self.mode)
         # Warm the jitted executor (single-rhs and smallest flush batch) as
-        # part of programming time; flush pads to powers of two, so each
-        # further batch-shape compile happens at most once per doubling.
+        # part of programming time; solve_many pads to powers of two, so
+        # each further batch-shape compile happens at most once per
+        # doubling regardless of queue length.
         jax.block_until_ready(solver.solve(jnp.zeros((solver.n,),
                                                      dtype=a.dtype)))
         jax.block_until_ready(solver.solve(jnp.zeros((solver.n, 1),
@@ -161,15 +168,17 @@ class SolverService:
         """Solve all queued right-hand sides in one fused call.
 
         Returns (n, k) solutions, column j answering the j-th submit since
-        the last flush; (n, 0) when the queue is empty.  The batch is padded
-        to the next power of two before solving (zero columns, sliced away)
-        so the jitted executor compiles at most one new shape per doubling
-        instead of one per distinct queue length.
+        the last flush; (n, 0) when the queue is empty.  `solve_many` owns
+        the power-of-two batch padding (so every caller - not just this
+        service - compiles at most one new shape per doubling instead of
+        one per distinct queue length); the stacked batch buffer is donated
+        to the solve, since the queue is dropped once answered anyway.
 
-        refined=True routes the padded batch through the fused analog-seed
-        -> Krylov-refine path instead of the raw analog solve (padding zero
-        columns start converged, so they never contribute iterations);
-        `refine_kw` forwards to `solve_refined` (tol/method/maxiter/...).
+        refined=True routes the batch through the fused analog-seed ->
+        Krylov-refine path instead of the raw analog solve (the batch is
+        padded here with zero columns, which start converged and never
+        contribute iterations); `refine_kw` forwards to `solve_refined`
+        (tol/method/maxiter/...).
         """
         q = self._queues[matrix_id]
         solver = self._solvers[matrix_id]
@@ -177,18 +186,16 @@ class SolverService:
             return jnp.zeros((solver.n, 0),
                              dtype=self._dense[matrix_id].dtype)
         k = len(q)
-        k_pad = 1 << (k - 1).bit_length()
         bs = jnp.stack(q, axis=1)
-        if k_pad > k:
-            bs = jnp.pad(bs, ((0, 0), (0, k_pad - k)))
         if refined:
+            bs, _ = pad_rhs_pow2(bs)   # the one serving padding policy
             xs_full, info = self._refine(matrix_id, bs, **refine_kw)
             xs = xs_full[:, :k]
             # only the k real columns count as served (padding columns are
             # zero right-hand sides: they start converged, zero iterations)
             self._count_refined(matrix_id, k, info)
         else:
-            xs = solver.solve_many(bs)[:, :k]
+            xs = solver.solve_many(bs, donate=True)
             st = self._stats[matrix_id]
             st.solve_calls += 1
             st.rhs_served += k

@@ -114,6 +114,70 @@ def test_crossbar_matches_analog_layer():
                                rtol=1e-4, atol=1e-6)
 
 
+# ------------------------------- arena_mvm --------------------------------
+
+def _arena_level_inputs(s=96, k=8, l=5, r=16, c=16, terms=2, seed=9):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    arena = jax.random.normal(k1, (s, k))
+    opstack = jax.random.normal(k2, (l, r, c)) / c
+    in_offs = jax.random.randint(k3, (l, terms), 0, s - c).astype(jnp.int32)
+    in_signs = jnp.where(
+        jax.random.bernoulli(k3, 0.5, (l, terms)), 1.0, -1.0
+    ).astype(jnp.float32)
+    # non-overlapping output windows, half of them accumulating pairs
+    out_offs = jnp.asarray([s - (i // 2 + 1) * r for i in range(l)],
+                           jnp.int32)
+    out_init = jnp.asarray([1 if i % 2 == 0 else 0 for i in range(l)],
+                           jnp.int32)
+    return arena, opstack, in_offs, in_signs, out_offs, out_init
+
+
+@pytest.mark.parametrize("dac,adc", [(None, None), (8, 8)])
+def test_arena_level_matches_ref(dac, adc):
+    """Megakernel (interpret on CPU) == sequential jnp oracle: signed
+    multi-term gather, init-vs-accumulate windows, fused quantisers."""
+    args = _arena_level_inputs()
+    out = ops.arena_level_apply(*args, dac_bits=dac, adc_bits=adc)
+    expect = ref.arena_level_ref(*args, dac_bits=dac, adc_bits=adc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_arena_level_preserves_untouched_cells():
+    """Cells outside this level's output windows carry through unchanged."""
+    arena, opstack, in_offs, in_signs, out_offs, out_init = \
+        _arena_level_inputs(l=2, r=8)
+    out = ops.arena_level_apply(arena, opstack, in_offs, in_signs,
+                                out_offs, out_init)
+    touched = set()
+    for o in np.asarray(out_offs):
+        touched.update(range(int(o), int(o) + 8))
+    keep = np.asarray([i for i in range(arena.shape[0])
+                       if i not in touched])
+    np.testing.assert_array_equal(np.asarray(out)[keep],
+                                  np.asarray(arena)[keep])
+
+
+def test_arena_kernel_runs_whole_cascade():
+    """One pallas_call executes a full uniform BlockAMC schedule (the
+    single-dispatch serving form) - pinned against the slot-SSA path."""
+    from repro.core import blockamc
+    from repro.core.analog import AnalogConfig
+    from repro.core.nonideal import NonidealConfig
+    from repro.data.matrices import random_rhs, wishart
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05),
+                       opa_gain=1e4)
+    a = wishart(jax.random.PRNGKey(1), 32)
+    ap = blockamc.compile_arena(blockamc.finalize(
+        blockamc.build_flat_plan(a, jax.random.PRNGKey(2), cfg, 2), cfg))
+    assert ap.program is not None
+    b = random_rhs(jax.random.PRNGKey(3), 32)
+    np.testing.assert_allclose(
+        np.asarray(blockamc.execute_arena(ap, b, use_kernel=True)),
+        np.asarray(blockamc.execute_arena(ap, b, use_kernel=False)),
+        rtol=1e-6, atol=1e-7)
+
+
 # ------------------------------- schur_gemm -------------------------------
 
 @pytest.mark.parametrize("i,j,k", [

@@ -13,7 +13,12 @@ The fixed-size goldens (test_flat_executor / test_golden_regression) pin
     in range, and bucket keys match stack shapes;
   * finalized MVM windows tile exactly: each tile-row's input windows are
     contiguous from 0 to the level's input length, each tile is used
-    exactly once, and group stacks/windows are congruent.
+    exactly once, and group stacks/windows are congruent;
+  * the arena allocator is sound (hypothesis target of the fused
+    executor): no two overlapping live ranges share arena cells, every
+    consumer/producer window stays inside its (live) slot, and the arena
+    extent is peak liveness exactly on aligned schedules / within one
+    slot of it on ragged ones.
 
 Runs under hypothesis when installed (tests/_hypothesis_compat.py); a
 fixed-size parametrized sweep keeps tier-1 coverage without it.
@@ -127,6 +132,69 @@ def _check_finalized(fin: blockamc.FinalizedPlan) -> None:
                         for i in range(len(wins))}, "orphaned tiles"
 
 
+def _check_arena(ap: blockamc.ArenaPlan) -> None:
+    """Arena allocator invariants (the DESIGN note's layout contract).
+
+    * live-range exclusivity: two materialized registers whose lifetimes
+      overlap in schedule time never overlap in arena address space;
+    * window containment: every consumer term window reads inside the slot
+      of a register that is live at that level, and every tile's output
+      window lies inside its destination register's slot;
+    * the arena extent equals the schedule's peak liveness on aligned
+      (single leaf shape) schedules and never exceeds peak + the largest
+      slot on ragged ones (fragmentation slack: optimal offline packing
+      can itself exceed peak liveness, so a slack-free bound is
+      unattainable in general).
+    """
+    ranges = ap.slot_ranges      # per mreg: (offset, length, def, last_use)
+    assert len(ranges) == len(ap.slot_offsets)
+    assert all(r[0] == o for r, o in zip(ranges, ap.slot_offsets))
+    # live-range exclusivity
+    for i, (o1, l1, d1, u1) in enumerate(ranges):
+        assert l1 > 0 and d1 <= u1
+        for (o2, l2, d2, u2) in ranges[i + 1:]:
+            time_overlap = not (u1 < d2 or u2 < d1)
+            addr_overlap = not (o1 + l1 <= o2 or o2 + l2 <= o1)
+            assert not (time_overlap and addr_overlap), \
+                "live ranges share arena cells"
+    # consumer/producer window containment, level by level (a level's
+    # schedule position is its output register's def position)
+    for level in ap.levels:
+        p = ranges[level[0][2]][2]
+        for sid, idx, m_out, out_local, init, segments in level:
+            rows, cols = ap.stacks[sid].shape[-2:]
+            covered = 0
+            for dst_lo, seg_len, terms in segments:
+                assert dst_lo == covered, "segments not contiguous"
+                covered += seg_len
+                assert terms, "empty gather term list"
+                for m, off, sign in terms:
+                    assert sign in (1, -1)
+                    _, ln, d, u = ranges[m]
+                    assert d < p <= u, "reads a register not live here"
+                    assert 0 <= off and off + seg_len <= ln, \
+                        "consumer window escapes its slot"
+            assert covered == cols, "gather does not cover the operand"
+            _, ln_out, d_out, _ = ranges[m_out]
+            assert d_out == p, "tile writes a register it does not define"
+            assert 0 <= out_local and out_local + rows <= ln_out, \
+                "output window escapes its slot"
+    # the output spec reads slots that survive to the end of the schedule
+    end = max(u for (_, _, _, u) in ranges)
+    for dst_lo, seg_len, terms in ap.out_spec:
+        for m, off, sign in terms:
+            _, ln, _, u = ranges[m]
+            assert u == end and off + seg_len <= ln
+    # extent vs peak liveness
+    assert ap.arena_size >= ap.peak_liveness   # disjointness lower bound
+    max_len = max(ln for (_, ln, _, _) in ranges)
+    assert ap.arena_size <= ap.peak_liveness + max_len, \
+        (ap.arena_size, ap.peak_liveness, max_len)
+    if len({s.shape[-2:] for s in ap.stacks}) == 1 and ap.kernel_ok:
+        assert ap.arena_size == ap.peak_liveness, \
+            "aligned schedule fragmented"
+
+
 def _build_and_check(n: int, stages: int, sigma: float) -> None:
     cfg = AnalogConfig(array_size=max(-(-n // max(2 ** stages, 1)), 2),
                        nonideal=NonidealConfig(sigma=sigma), opa_gain=1e4)
@@ -134,7 +202,9 @@ def _build_and_check(n: int, stages: int, sigma: float) -> None:
     fplan = blockamc.compile_plan(blockamc.build_plan(a, KN, cfg,
                                                       stages=stages))
     _check_flat_plan(fplan, n)
-    _check_finalized(blockamc.finalize(fplan, cfg))
+    fin = blockamc.finalize(fplan, cfg)
+    _check_finalized(fin)
+    _check_arena(blockamc.compile_arena(fin))
 
 
 @pytest.mark.parametrize("n,stages", [
