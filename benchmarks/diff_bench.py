@@ -12,7 +12,10 @@ warmup+median timing protocol) make the script exit nonzero so the job
 fails instead of silently accumulating a slowdown.  A metric counts as a
 regression when a time-like value (`*_us`, `*_s`, `us_per_call`) grows or
 a `speedup`-like value shrinks; accuracy/config metrics only ever report.
---no-gate restores report-only behaviour.
+The rule is name-based, so new serving-path keys gate automatically - the
+multi-tenant `packed_*` entries (speedup_flush / speedup_program /
+flush_all_us ...) entered the rolling baseline the first nightly after
+they landed.  --no-gate restores report-only behaviour.
 """
 from __future__ import annotations
 

@@ -42,12 +42,17 @@ def main() -> None:
     ap.add_argument("--bench-iters", type=int, default=None,
                     help="timed calls per median (default %d)"
                          % common.TIMED_ITERS)
+    ap.add_argument("--bench-tenants", type=int, default=None,
+                    help="tenant count for the multi-tenant packed bench "
+                         "(default: 4 in smoke mode, 4 and 16 otherwise)")
     args = ap.parse_args()
 
     if args.bench_warmup is not None:
         common.TIMED_WARMUP = args.bench_warmup
     if args.bench_iters is not None:
         common.TIMED_ITERS = args.bench_iters
+    if args.bench_tenants is not None:
+        kernel_bench.TENANTS = (args.bench_tenants,)
 
     if args.paper:
         hybrid_refinement.N = hybrid_refinement.N_PAPER

@@ -103,6 +103,40 @@ executor by the four-way equivalence suite (tests/test_fused_arena.py,
 TESTING.md).  It is the default `mode="fused"` on the serving surfaces
 (`ProgrammedSolver`, `SolverService`, `AnalogPreconditioner`);
 `mode="reference"` keeps the finalized path.
+
+DESIGN - the packed instance axis (multi-tenant serving)
+========================================================
+A solver service fields many *different matrices* concurrently; the packed
+layer adds the cross-tenant axis the per-matrix arena form lacks.
+
+  * **Signature-stackability invariant.**  Every static artifact of the
+    compile pipeline - partition split tree, bucket shapes, flat schedule,
+    finalized windows, arena slot layout, whole-schedule window program -
+    is a deterministic function of (n, stages, cfg) alone; matrix values
+    and noise keys only ever flow into array *contents*.
+    `plan_signature(n, stages, cfg)` is therefore a sufficient key: plans
+    with equal signatures flatten to identical treedefs, leaf shapes and
+    static metadata, and may be stacked leaf-for-leaf on a leading
+    instance axis (pinned by tests/test_plan_properties.py).
+  * **Instance-axis layout.**  A `PackedArenaPlan` stores the shared
+    static metadata once and carries every operator stack as
+    (M, L, rows, cols) - instance axis first, then the ArenaPlan layout
+    unchanged - with (M,) scales and, for uniform plans, the (M, T, r, c)
+    whole-schedule operator sequence over ONE shared (T, ...) window
+    program.  Batched programming (`program_system_batched` /
+    `finalize_batched` / `compile_arena_batched`, or `program_packed`
+    end to end) vmaps the per-matrix pipeline, so programming a fleet
+    costs one trace; `pack_arena_plans` stacks independently programmed
+    plans (the `SolverService.flush_all` path).
+  * **One dispatch over (tenants x rhs).**  `execute_arena_packed` runs
+    every schedule level as stacked-tile matmuls whose batch dims carry
+    the instance axis (per-tenant results bit-for-bit with that tenant's
+    own `execute_arena` eagerly on CPU for aligned power-of-two plans;
+    last-ulp on ragged splits), and the packed Pallas megakernel
+    (`kernels/arena_mvm.py arena_packed_apply`) grows an instance grid
+    axis: grid (M, T) over an (M, S, K) arena stack, the whole fleet in
+    ONE pallas_call.  `sharding.partition.mc_packed_specs` shards the
+    instance axis over the mc mesh (`execute_arena_packed_sharded`).
 """
 from __future__ import annotations
 
@@ -257,22 +291,45 @@ jax.tree_util.register_dataclass(
     PartitionedSystem, data_fields=["root", "scale"], meta_fields=[])
 
 
-def _partition(a: jnp.ndarray, stages: int) -> Target:
-    n = a.shape[0]
+def _split_tree(n: int, stages: int):
+    """The static partition split tree for (n, stages): a leaf size, or a
+    pair of subtrees.
+
+    The one definition of the split rule - `_partition` consumes this tree
+    and `plan_signature` hashes it, so the packed-serving stackability key
+    stays correct by construction if the rule ever changes.  A 1x1 block
+    cannot be partitioned further: splitting it would produce zero-width
+    A2/A3 and an empty Schur complement (physical arrays with no devices),
+    so surplus stages stop there.  Paper: for odd n, A1 takes (n+1)/2; any
+    square A1 works.
+    """
     if stages == 0 or n <= 1:
-        # a 1x1 block cannot be partitioned further: splitting it would
-        # produce zero-width A2/A3 and an empty Schur complement (i.e.
-        # physical arrays with no devices), so surplus stages stop here.
-        return LeafTarget(a)
-    # Paper: for odd n, A1 takes (n+1)/2; any square A1 works.
+        return int(n)
     m = -(-n // 2)
+    return (_split_tree(m, stages - 1), _split_tree(n - m, stages - 1))
+
+
+def _tree_size(tree) -> int:
+    return tree if isinstance(tree, int) else \
+        _tree_size(tree[0]) + _tree_size(tree[1])
+
+
+def _partition_by(a: jnp.ndarray, tree) -> Target:
+    if isinstance(tree, int):
+        return LeafTarget(a)
+    left, right = tree
+    m = _tree_size(left)
     a1, a2 = a[:m, :m], a[:m, m:]
     a3, a4 = a[m:, :m], a[m:, m:]
     # Digital pre-processing of the Schur complement (paper Eq. 3).  Done in
     # f32 here, standing in for the host preprocessor in Fig. 3.
     a4s = a4 - a3 @ jnp.linalg.solve(a1, a2)
-    return BlockTarget(_partition(a1, stages - 1), a2, a3,
-                       _partition(a4s, stages - 1), m)
+    return BlockTarget(_partition_by(a1, left), a2, a3,
+                       _partition_by(a4s, right), m)
+
+
+def _partition(a: jnp.ndarray, stages: int) -> Target:
+    return _partition_by(a, _split_tree(a.shape[0], stages))
 
 
 def partition_system(a: jnp.ndarray, cfg: AnalogConfig,
@@ -1162,6 +1219,16 @@ def _slot_gather(vals, segments):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
+def _arena_out_spec(out_spec, slot_offsets):
+    """`out_spec` with register terms rebased to physical arena offsets
+    (register 0 = the whole arena buffer) - the kernel-path output gather
+    form, shared by the single-instance and packed executors."""
+    return tuple(
+        (dst, ln, tuple((0, slot_offsets[m] + off, sign)
+                        for m, off, sign in terms))
+        for dst, ln, terms in out_spec)
+
+
 def _apply_level_jnp(vals, stacks, level):
     """One schedule level in slot-SSA form (the CPU fast path).
 
@@ -1171,10 +1238,29 @@ def _apply_level_jnp(vals, stacks, level):
     Tile-row accumulation replays the schedule order (init starts a row
     part, later tiles add into it); the row parts concatenate into the
     level's output register.
+
+    A multi-tile level whose tiles share one operator stack runs as ONE
+    batched dot over the tile axis instead of one dot per tile: each
+    tile's matvec reduction is unchanged (per-slice identical math; the
+    accumulation below still replays schedule order), but XLA:CPU's
+    batched-matmul throughput scales strongly with batch size, which is
+    what makes the packed multi-tenant executor - where the instance axis
+    multiplies the batch again - beat the per-tenant dispatch loop.
     """
     parts, m_out = [], level[0][2]
-    for sid, idx, _, _, init, segments in level:
-        out = stacks[sid][idx] @ _slot_gather(vals, segments)
+    if len(level) > 1 and len({t[0] for t in level}) == 1:
+        sid, idxs = level[0][0], tuple(t[1] for t in level)
+        gathers = jnp.stack([_slot_gather(vals, t[5]) for t in level])
+        lo = idxs[0]
+        ops_sel = (stacks[sid][lo:lo + len(idxs)]
+                   if idxs == tuple(range(lo, lo + len(idxs)))
+                   else stacks[sid][jnp.asarray(idxs)])
+        outs = ops_sel @ gathers                    # (L, rows, k)
+        tile_outs = [outs[pos] for pos in range(len(level))]
+    else:
+        tile_outs = [stacks[sid][idx] @ _slot_gather(vals, segments)
+                     for sid, idx, _, _, _, segments in level]
+    for out, (_, _, _, _, init, _) in zip(tile_outs, level):
         if init:
             parts.append(out)
         else:
@@ -1258,11 +1344,8 @@ def execute_arena(ap: ArenaPlan, b: jnp.ndarray,
             for level in ap.levels:
                 arena = _apply_level_kernel(arena, ap, level,
                                             interpret=not on_tpu)
-        so = ap.slot_offsets
-        out_spec = tuple(
-            (dst, ln, tuple((0, so[m] + off, sign) for m, off, sign in terms))
-            for dst, ln, terms in ap.out_spec)
-        out = _slot_gather({0: arena}, out_spec)
+        out = _slot_gather({0: arena},
+                           _arena_out_spec(ap.out_spec, ap.slot_offsets))
     else:
         vals = {0: b_in}
         for level in ap.levels:
@@ -1279,18 +1362,20 @@ _execute_arena_donated = jax.jit(execute_arena, donate_argnums=(1,),
 
 
 def pad_rhs_pow2(bs: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
-    """Zero-pad an (n, k) rhs batch to the next power-of-two k.
+    """Zero-pad the trailing rhs-batch axis to the next power-of-two k.
 
-    The one padding policy of the serving layer (ProgrammedSolver.solve_many
-    and SolverService's refined flush both route through it): jitted
-    executors then compile at most one new batch shape per doubling instead
-    of one per distinct queue length.  Returns (padded batch, original k);
-    slice the result back with `[:, :k]`.
+    The one padding policy of the serving layer (ProgrammedSolver.solve_many,
+    SolverService's refined flush and the packed `flush_all` all route
+    through it): jitted executors then compile at most one new batch shape
+    per doubling instead of one per distinct queue length.  Accepts the
+    single-matrix (n, k) layout or the packed (M, n, k) layout - the rhs
+    axis is always the last.  Returns (padded batch, original k); slice the
+    result back with `[..., :k]`.
     """
-    k = bs.shape[1]
+    k = bs.shape[-1]
     k_pad = 1 << (k - 1).bit_length() if k else 0
     if k_pad > k:
-        bs = jnp.pad(bs, ((0, 0), (0, k_pad - k)))
+        bs = jnp.pad(bs, [(0, 0)] * (bs.ndim - 1) + [(0, k_pad - k)])
     return bs, k
 
 
@@ -1412,6 +1497,327 @@ class ProgrammedSolver:
             fn = _execute_arena_donated if donate else _execute_arena
             xs = fn(self.arena, bs)
         return xs[:, :k] if k_pad > k else xs
+
+
+# ---------------------------------------------------------------------------
+# Packed multi-tenant serving: one dispatch over (instances x rhs)
+#
+# A production solver service fields requests for many *different* matrices
+# concurrently.  Per matrix, the arena executor already collapses a solve to
+# one dispatch; across matrices the service still paid one dispatch per
+# tenant per flush.  The packed layer adds the missing instance axis:
+#
+#   plan_signature(n, stages, cfg)   the structural stackability key
+#   pack_partitioned / program_system_batched / finalize_batched /
+#   compile_arena_batched            the batched programming pipeline -
+#                                    one vmapped trace programs M matrices
+#   PackedArenaPlan                  M same-signature arena plans stacked
+#                                    leaf-for-leaf: (M, L, r, c) operator
+#                                    stacks, (M,) scales, one shared static
+#                                    schedule / layout / window program
+#   pack_arena_plans                 stack already-compiled ArenaPlans
+#                                    (the serving flush_all path)
+#   execute_arena_packed             the whole fleet as stacked-tile
+#                                    matmuls; the Pallas megakernel grows
+#                                    an instance grid axis
+#
+# Stackability invariant: every *static* artifact of the compile pipeline
+# (partition split tree, bucket shapes, flat schedule, finalized windows,
+# arena slot layout, whole-schedule window program) is a deterministic
+# function of (n, stages, cfg) alone - matrix values and noise keys only
+# ever flow into array *contents*, never into shapes or schedules.  Plans
+# with equal `plan_signature` therefore flatten to identical treedefs with
+# identical leaf shapes and identical static metadata, and may be stacked
+# on a leading instance axis and executed by one program.  The signature-
+# bucketing properties are pinned in tests/test_plan_properties.py; the
+# packed-vs-loop equivalence in tests/test_packed_serving.py.
+# ---------------------------------------------------------------------------
+
+
+def plan_signature(n: int, stages: Optional[int], cfg: AnalogConfig):
+    """Structural signature of the whole compile pipeline for (n, stages, cfg).
+
+    Returns a hashable key with the property: equal signatures imply the
+    flat schedule, bucket shapes, finalized windows and arena layout of two
+    programmed matrices are identical (see the stackability invariant
+    above), so their plans can be packed on a leading instance axis.
+    stages=None resolves to `required_stages` exactly like
+    `partition_system`.  The split tree hashed here is the `_split_tree`
+    `_partition` itself consumes (the root static artifact every later
+    stage derives from), so the signature tracks the split rule by
+    construction; n, the resolved stage count and the full AnalogConfig
+    make unequal problems hash apart.
+    """
+    if stages is None:
+        stages = required_stages(n, cfg.array_size)
+    return ("blockamc", int(n), int(stages), _split_tree(n, stages), cfg)
+
+
+def pack_partitioned(parts_seq) -> PartitionedSystem:
+    """Stack same-signature PartitionedSystems on a leading instance axis.
+
+    The stacked system feeds `program_system_batched`; callers are expected
+    to have bucketed by `plan_signature` (same treedef / leaf shapes), which
+    `jnp.stack` enforces mechanically anyway.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *parts_seq)
+
+
+def program_system_batched(parts: PartitionedSystem, keys: jax.Array,
+                           cfg: AnalogConfig) -> FlatPlan:
+    """Program + flat-compile M instances in one vmap.
+
+    `parts` carries a leading instance axis on every leaf (from
+    `pack_partitioned`) and `keys` is (M, ...), one independent noise draw
+    per instance; the result is a FlatPlan whose conductance stacks are
+    (M, num_arrays, r, c) under one shared static schedule.  Programming M
+    matrices costs one trace instead of M - the per-matrix loop's Python
+    walk and per-plan dispatch disappear.
+    """
+    return jax.vmap(lambda p, k: compile_plan(program_system(p, k, cfg)))(
+        parts, keys)
+
+
+def finalize_batched(fplans: FlatPlan, cfg: AnalogConfig) -> FinalizedPlan:
+    """`finalize` over a leading instance axis: (M, ...) LU factor stacks,
+    (M, L, r, c) MVM tile stacks, one shared schedule."""
+    return jax.vmap(lambda fp: finalize(fp, cfg))(fplans)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedArenaPlan:
+    """M same-signature ArenaPlans stacked on a leading instance axis.
+
+    `stacks[i]` is the i-th operator stack of the shared layout with shape
+    (M, L, r, c) (explicit negated INV inverses first, then the
+    sign/divisor-folded MVM tiles - exactly ArenaPlan's vocabulary, one
+    instance axis in front); `scale` is (M,).  The static metadata (levels,
+    out_spec, slot offsets, arena size) is the single shared copy every
+    instance was compiled to - that sharing is what `plan_signature`
+    guarantees and `pack_arena_plans` verifies.  For uniform power-of-two
+    plans, `program_ops` is the (M, T, r, c) whole-schedule operator
+    sequence and `program_meta` the shared (T, ...) window metadata the
+    packed Pallas megakernel executes with an instance grid axis.
+    """
+
+    def __init__(self, stacks, scale, program_ops, program_meta, levels,
+                 out_spec, arena_size, n, in_off, cfg, kernel_ok,
+                 num_arrays, slot_offsets, num_instances):
+        self.stacks = stacks
+        self.scale = scale
+        self.program_ops = program_ops    # (M, T, r, c) or None
+        self.program_meta = program_meta  # shared (T, ...) metadata or None
+        self.levels = levels
+        self.out_spec = out_spec
+        self.arena_size = arena_size
+        self.n = n
+        self.in_off = in_off
+        self.cfg = cfg
+        self.kernel_ok = kernel_ok
+        self.num_arrays = num_arrays      # per instance
+        self.slot_offsets = slot_offsets
+        self.num_instances = num_instances
+
+    def tree_flatten(self):
+        return ((self.stacks, self.scale, self.program_ops,
+                 self.program_meta),
+                (self.levels, self.out_spec, self.arena_size, self.n,
+                 self.in_off, self.cfg, self.kernel_ok, self.num_arrays,
+                 self.slot_offsets, self.num_instances))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+
+# Static ArenaPlan metadata that must agree for plans to share one packed
+# program (the mechanical form of the signature-stackability invariant).
+_STACKABLE_FIELDS = ("levels", "out_spec", "arena_size", "n", "in_off",
+                     "cfg", "kernel_ok", "slot_offsets")
+
+
+def pack_arena_plans(aps) -> PackedArenaPlan:
+    """Stack already-compiled same-signature ArenaPlans into a packed plan.
+
+    The serving `flush_all` path: each tenant's matrix was programmed (and
+    arena-compiled) independently at admission time; packing is a pure
+    leaf-for-leaf `jnp.stack` plus a static-metadata equality check, so it
+    is cheap enough to run per flush.  Raises ValueError when the plans'
+    static structure diverges (different `plan_signature` - they cannot
+    share one schedule).
+    """
+    aps = list(aps)
+    if not aps:
+        raise ValueError("pack_arena_plans needs at least one plan")
+    ap0 = aps[0]
+    for ap in aps[1:]:
+        for f in _STACKABLE_FIELDS:
+            if getattr(ap, f) != getattr(ap0, f):
+                raise ValueError(
+                    f"arena plans are not stackable: static field {f!r} "
+                    f"differs (plans compiled from different "
+                    f"plan_signature buckets?)")
+    stacks = tuple(jnp.stack([ap.stacks[i] for ap in aps])
+                   for i in range(len(ap0.stacks)))
+    scale = jnp.stack([ap.scale for ap in aps])
+    program_ops = program_meta = None
+    if ap0.program is not None:
+        program_ops = jnp.stack([ap.program[0] for ap in aps])
+        program_meta = ap0.program[1:]
+    return PackedArenaPlan(stacks, scale, program_ops, program_meta,
+                           ap0.levels, ap0.out_spec, ap0.arena_size, ap0.n,
+                           ap0.in_off, ap0.cfg, ap0.kernel_ok,
+                           ap0.num_arrays, ap0.slot_offsets, len(aps))
+
+
+def compile_arena_batched(fins: FinalizedPlan) -> PackedArenaPlan:
+    """`compile_arena` over a leading instance axis -> PackedArenaPlan.
+
+    `fins` is a finalized-plan stack from `finalize_batched`.  The static
+    analysis (views, live ranges, offsets) traces once for the shared
+    schedule; only the numeric operator work (explicit bucket inversion,
+    divisor folding) is vmapped, so the packed compile costs one trace for
+    all M instances.  The whole-schedule window metadata is identical
+    across instances by construction and stored once.
+    """
+    aps = jax.vmap(compile_arena)(fins)
+    program_ops = program_meta = None
+    if aps.program is not None:
+        # vmap broadcast the (constant) metadata arrays; keep one copy.
+        ops_seq, in_offs, in_signs, out_offs, out_init = aps.program
+        program_ops = ops_seq
+        program_meta = (in_offs[0], in_signs[0], out_offs[0], out_init[0])
+    return PackedArenaPlan(aps.stacks, aps.scale, program_ops, program_meta,
+                           aps.levels, aps.out_spec, aps.arena_size, aps.n,
+                           aps.in_off, aps.cfg, aps.kernel_ok,
+                           aps.num_arrays, aps.slot_offsets,
+                           aps.scale.shape[0])
+
+
+def program_packed(As: jnp.ndarray, keys: jax.Array, cfg: AnalogConfig,
+                   stages: Optional[int] = None) -> PackedArenaPlan:
+    """Full batched programming flow for an (M, n, n) matrix stack.
+
+    One jitted trace runs partitioning, Schur complements, conductance
+    mapping, finalization and arena compilation for all M matrices -
+    programming a fleet stops costing M traces/compiles.  All matrices
+    share (n, stages, cfg), i.e. one `plan_signature`.
+    """
+    return _program_packed(As, keys, cfg, stages)
+
+
+@partial(jax.jit, static_argnames=("cfg", "stages"))
+def _program_packed(As, keys, cfg, stages):
+    parts = jax.vmap(lambda a: partition_system(a, cfg, stages))(As)
+    fplans = program_system_batched(parts, keys, cfg)
+    return compile_arena_batched(finalize_batched(fplans, cfg))
+
+
+def execute_arena_packed(pp: PackedArenaPlan, bs: jnp.ndarray,
+                         use_kernel: Optional[bool] = None) -> jnp.ndarray:
+    """Run the whole packed fleet; returns per-instance solutions.
+
+    `bs` is (M, n) - one rhs per instance - or (M, n, k): instance i's
+    k-column batch.  Every schedule level of the jnp path is one stacked-
+    tile matmul over the (M, L, r, c) operator stacks (the instance axis
+    rides the batch dims of each dot), so the fleet costs one schedule
+    walk instead of M.  On the kernel path, a uniform plan runs ALL
+    instances' cascades as ONE megakernel call whose grid walks
+    (instance, tile) over an (M, S, K) arena stack; use_kernel=None routes
+    through the kernel on TPU when the plan is uniform, True forces it
+    (interpret mode off TPU - the CI smoke), False forces jnp.
+
+    Per-instance results equal `execute_arena` on that instance's own plan
+    bit-for-bit when both run eagerly on CPU on aligned power-of-two plans
+    (batching the dots over the instance axis neither reassociates a
+    per-instance reduction nor changes the per-slice dot kernel); ragged
+    odd splits are last-ulp float tolerance (the packed-vs-loop contract,
+    tests/test_packed_serving.py).
+    """
+    cfg = pp.cfg
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu and pp.kernel_ok and pp.program_ops is not None
+    elif use_kernel and (not pp.kernel_ok or pp.program_ops is None):
+        raise ValueError(
+            "use_kernel=True but this packed plan has no uniform "
+            "whole-schedule program (ragged windows or mixed tile "
+            "shapes); use the jnp path or a power-of-two configuration")
+    single = bs.ndim == 2
+    dtype = jnp.result_type(bs.dtype, pp.scale.dtype)
+    bk = bs[..., None] if single else bs
+    b_in = analog.dac(bk, cfg).astype(dtype)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        m = b_in.shape[0]
+        arena = jnp.zeros((m, pp.arena_size) + bk.shape[2:], dtype)
+        arena = arena.at[:, pp.in_off:pp.in_off + pp.n].set(b_in)
+        in_offs, in_signs, out_offs, out_init = pp.program_meta
+        arena = kops.arena_packed_apply(
+            arena, pp.program_ops, in_offs, in_signs, out_offs, out_init,
+            interpret=not on_tpu)
+        out_spec = _arena_out_spec(pp.out_spec, pp.slot_offsets)
+        out = jax.vmap(lambda ar: _slot_gather({0: ar}, out_spec))(arena)
+    else:
+        def one(stacks, b1):
+            vals = {0: b1}
+            for level in pp.levels:
+                _apply_level_jnp(vals, stacks, level)
+            return _slot_gather(vals, pp.out_spec)
+
+        out = jax.vmap(one)(pp.stacks, b_in)
+    if single:
+        out = out[..., 0]
+    scale = pp.scale.reshape((-1,) + (1,) * (out.ndim - 1))
+    return -scale * analog.adc(out, cfg)
+
+
+_execute_arena_packed = jax.jit(execute_arena_packed,
+                                static_argnames=("use_kernel",))
+_execute_arena_packed_donated = jax.jit(execute_arena_packed,
+                                        donate_argnums=(1,),
+                                        static_argnames=("use_kernel",))
+
+
+def execute_arena_packed_sharded(pp: PackedArenaPlan, bs: jnp.ndarray,
+                                 mesh=None, axis_name: str = "mc",
+                                 use_kernel: Optional[bool] = None
+                                 ) -> jnp.ndarray:
+    """`execute_arena_packed` with the instance axis sharded over a mesh.
+
+    Each device runs its own shard of the packed fleet (operator stacks,
+    scales and right-hand sides all carry the instance axis; the shared
+    window-program metadata is replicated - specs from
+    `repro.sharding.partition.mc_packed_specs`).  num_instances must
+    divide evenly over the mesh axis.  mesh=None builds a 1-D mesh over
+    all local devices via `repro.launch.mesh.make_mc_mesh`.
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_mc_mesh
+        mesh = make_mc_mesh(axis_name=axis_name)
+    n_shards = mesh.shape[axis_name]
+    if pp.num_instances % n_shards:
+        raise ValueError(
+            f"num_instances={pp.num_instances} must divide over the "
+            f"{axis_name!r} mesh axis of size {n_shards}")
+    return _sharded_packed_executor(pp, bs, mesh, axis_name, use_kernel)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis_name", "use_kernel"))
+def _sharded_packed_executor(pp, bs, mesh, axis_name, use_kernel):
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.partition import mc_packed_specs
+
+    in_specs, out_specs = mc_packed_specs(pp, axis_name)
+    mapped = shard_map(
+        lambda p, b: execute_arena_packed(p, b, use_kernel=use_kernel),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    return mapped(pp, bs)
 
 
 # ---------------------------------------------------------------------------

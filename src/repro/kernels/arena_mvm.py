@@ -22,6 +22,12 @@ DAC/ADC quantisation is fused into the tile loop exactly as in
 `crossbar_mvm.py` (ideal converters by default - the cascade quantises once
 at the input and once at the output, not per level).
 
+`arena_packed_apply` is the multi-tenant extension: an *instance* grid
+axis in front (grid = (M, T)) runs the whole shared tile program for M
+packed same-signature plans over an (M, S, K) arena stack - window
+metadata is one shared SMEM copy, operators carry a per-instance axis -
+so one pallas_call serves an entire fleet of matrices.
+
 On TPU the metadata arrays (offsets, signs, init flags) ride in SMEM so
 the dynamic window starts are scalar reads, and the dot hits the MXU;
 `interpret=True` (the CPU CI smoke) executes the same body in Python per
@@ -50,12 +56,24 @@ except Exception:  # pragma: no cover - CPU container fallback
 from repro.core.quantization import quantize as _quantize
 
 
-def _arena_level_kernel(in_offs_ref, in_signs_ref, out_offs_ref,
-                        out_init_ref, ops_ref, arena_ref, out_ref, *,
-                        rows: int, cols: int, n_terms: int,
-                        dac_bits: int | None, adc_bits: int | None,
-                        fullscale: float):
-    t = pl.program_id(0)
+def _arena_packed_kernel(in_offs_ref, in_signs_ref, out_offs_ref,
+                         out_init_ref, ops_ref, arena_ref, out_ref, *,
+                         rows: int, cols: int, n_terms: int,
+                         dac_bits: int | None, adc_bits: int | None,
+                         fullscale: float):
+    """The one arena tile-program body, instance-packed.
+
+    grid = (M, T) walks every tile of the shared schedule (t, the fast
+    axis) for each packed instance i.  Instance i owns its own (1, S, K)
+    arena block - revisited across its whole t sweep, so level outputs
+    accumulate in place - while the window metadata is one shared
+    (T, ...) copy in SMEM and `ops` carries the per-instance operator
+    sequence (M, T, R, C).  One pallas_call therefore executes the ENTIRE
+    cascade of the ENTIRE fleet; the single-instance entry point
+    (`arena_level_apply`) is the M=1 special case of this same body, so
+    the two paths cannot diverge.
+    """
+    t = pl.program_id(1)
 
     # Carry the untouched arena cells through: the output buffer is the
     # arena, and only this level's output windows may change.  (With the
@@ -68,15 +86,15 @@ def _arena_level_kernel(in_offs_ref, in_signs_ref, out_offs_ref,
     # Reads go through out_ref so tiles see this level's in-order writes
     # never needed for correctness (inputs and outputs of one level are
     # disjoint by construction) but required when the buffers alias.
-    v = jnp.zeros((cols, out_ref.shape[1]), jnp.float32)
+    v = jnp.zeros((cols, out_ref.shape[-1]), jnp.float32)
     for j in range(n_terms):                       # static unroll
         off = in_offs_ref[t, j]
-        v = v + in_signs_ref[t, j] * out_ref[pl.ds(off, cols), :]
+        v = v + in_signs_ref[t, j] * out_ref[0, pl.ds(off, cols), :]
     v = _quantize(v, dac_bits, fullscale)
 
     # (R, C) x (C, K) -> (R, K) on the MXU; sign/divisor pre-folded in ops.
     out = jax.lax.dot_general(
-        ops_ref[0], v, (((1,), (0,)), ((), ())),
+        ops_ref[0, 0], v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     out = _quantize(out, adc_bits, fullscale)
 
@@ -84,11 +102,55 @@ def _arena_level_kernel(in_offs_ref, in_signs_ref, out_offs_ref,
 
     @pl.when(out_init_ref[t] == 1)
     def _set():
-        out_ref[pl.ds(o, rows), :] = out
+        out_ref[0, pl.ds(o, rows), :] = out
 
     @pl.when(out_init_ref[t] == 0)
     def _accumulate():
-        out_ref[pl.ds(o, rows), :] += out
+        out_ref[0, pl.ds(o, rows), :] += out
+
+
+def arena_packed_apply(arena: jnp.ndarray, ops: jnp.ndarray,
+                       in_offs: jnp.ndarray, in_signs: jnp.ndarray,
+                       out_offs: jnp.ndarray, out_init: jnp.ndarray, *,
+                       dac_bits: int | None = None,
+                       adc_bits: int | None = None, fullscale: float = 1.0,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Run a whole packed tile program; returns the updated arena stack.
+
+    Args:
+      arena:    (M, S, K) f32 register arenas, one per packed instance.
+      ops:      (M, T, R, C) operator tiles in shared schedule order.
+      in_offs:  (T, J) int32 arena offsets of each tile's input windows
+                (shared across instances - the stackability invariant).
+      in_signs: (T, J) f32 signs (+1/-1; 0 pads unused term slots).
+      out_offs: (T,) int32 output window offsets.
+      out_init: (T,) int32; 1 = first write of its window, 0 = accumulate.
+    """
+    m, s, k = arena.shape
+    _, t_steps, rows, cols = ops.shape
+    assert ops.shape[0] == m, (ops.shape, m)
+    assert in_offs.shape == in_signs.shape == (t_steps, in_offs.shape[1])
+    assert out_offs.shape == out_init.shape == (t_steps,)
+    n_terms = in_offs.shape[1]
+    kernel = functools.partial(
+        _arena_packed_kernel, rows=rows, cols=cols, n_terms=n_terms,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale)
+    smem = {} if interpret or _SMEM is None else {"memory_space": _SMEM}
+    meta = pl.BlockSpec(in_offs.shape, lambda i, t: (0, 0), **smem)
+    flat = pl.BlockSpec((t_steps,), lambda i, t: (0,), **smem)
+    inst = pl.BlockSpec((1, s, k), lambda i, t: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(m, t_steps),
+        in_specs=[meta, meta, flat, flat,
+                  pl.BlockSpec((1, 1, rows, cols),
+                               lambda i, t: (i, t, 0, 0)),
+                  inst],
+        out_specs=inst,
+        out_shape=jax.ShapeDtypeStruct((m, s, k), jnp.float32),
+        input_output_aliases={5: 0},     # each arena updates in place
+        interpret=interpret,
+    )(in_offs, in_signs, out_offs, out_init, ops, arena)
 
 
 def arena_level_apply(arena: jnp.ndarray, ops: jnp.ndarray,
@@ -99,6 +161,9 @@ def arena_level_apply(arena: jnp.ndarray, ops: jnp.ndarray,
                       interpret: bool = False) -> jnp.ndarray:
     """Apply one arena level group; returns the updated arena.
 
+    The M=1 special case of `arena_packed_apply` (one kernel body for the
+    single-tenant and packed paths - they cannot diverge).
+
     Args:
       arena:    (S, K) f32 register arena (K = RHS batch).
       ops:      (L, R, C) operator tiles (sign/divisor folded).
@@ -107,28 +172,10 @@ def arena_level_apply(arena: jnp.ndarray, ops: jnp.ndarray,
       out_offs: (L,) int32 output window offsets.
       out_init: (L,) int32; 1 = first write of its window, 0 = accumulate.
     """
-    s, k = arena.shape
-    l, rows, cols = ops.shape
+    l = ops.shape[0]
     assert in_offs.shape == in_signs.shape == (l, in_offs.shape[1])
     assert out_offs.shape == out_init.shape == (l,)
-    n_terms = in_offs.shape[1]
-    kernel = functools.partial(
-        _arena_level_kernel, rows=rows, cols=cols, n_terms=n_terms,
-        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale)
-    # metadata lives in SMEM on TPU (dynamic-slice starts must be scalar
-    # reads); interpret mode ignores memory spaces
-    smem = {} if interpret or _SMEM is None else {"memory_space": _SMEM}
-    meta = pl.BlockSpec(in_offs.shape, lambda t: (0, 0), **smem)
-    flat = pl.BlockSpec((l,), lambda t: (0,), **smem)
-    whole = pl.BlockSpec((s, k), lambda t: (0, 0))
-    return pl.pallas_call(
-        kernel,
-        grid=(l,),
-        in_specs=[meta, meta, flat, flat,
-                  pl.BlockSpec((1, rows, cols), lambda t: (t, 0, 0)),
-                  whole],
-        out_specs=whole,
-        out_shape=jax.ShapeDtypeStruct((s, k), jnp.float32),
-        input_output_aliases={5: 0},     # the arena updates in place
-        interpret=interpret,
-    )(in_offs, in_signs, out_offs, out_init, ops, arena)
+    return arena_packed_apply(
+        arena[None], ops[None], in_offs, in_signs, out_offs, out_init,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale,
+        interpret=interpret)[0]

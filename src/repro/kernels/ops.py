@@ -103,6 +103,32 @@ def arena_level_apply(arena, ops, in_offs, in_signs, out_offs, out_init, *,
     return out[:, :k].astype(arena.dtype)
 
 
+@partial(jax.jit, static_argnames=("dac_bits", "adc_bits", "fullscale",
+                                   "interpret"))
+def arena_packed_apply(arena, ops, in_offs, in_signs, out_offs, out_init, *,
+                       dac_bits=None, adc_bits=None, fullscale: float = 1.0,
+                       interpret: bool | None = None):
+    """Whole packed tile program (see kernels/arena_mvm.py); returns arenas.
+
+    arena: (M, S, K) instance-stacked register arenas, ops: (M, T, R, C)
+    per-instance operator sequences, window metadata (T, ...) shared across
+    instances.  Same padding/dtype policy as `arena_level_apply`: the RHS
+    batch dim K pads to the f32 lane width and slices back; M, S and the
+    tile dims are used as-is (arena offsets are positions in the register
+    file).  Computes in f32, cast back to the arena's dtype.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, s, k = arena.shape
+    blk = 128
+    ap = _pad_to(arena.astype(jnp.float32), (1, 1, blk))
+    out = _arena.arena_packed_apply(
+        ap, ops.astype(jnp.float32), in_offs, in_signs, out_offs, out_init,
+        dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale,
+        interpret=interpret)
+    return out[:, :, :k].astype(arena.dtype)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def schur_update(a4, a3, w, *, interpret: bool | None = None):
     """Fused A4 - A3 @ W; see kernels/schur_gemm.py.  Any shapes; pads."""

@@ -37,6 +37,20 @@ def arena_level_ref(arena, ops, in_offs, in_signs, out_offs, out_init, *,
     return arena
 
 
+def arena_packed_ref(arena, ops, in_offs, in_signs, out_offs, out_init, *,
+                     dac_bits=None, adc_bits=None, fullscale=1.0):
+    """Oracle for the instance-packed megakernel (kernels/arena_mvm.py).
+
+    Each packed instance replays the shared tile program on its own arena
+    with its own operator sequence - M independent `arena_level_ref` runs.
+    """
+    return jnp.stack([
+        arena_level_ref(arena[i], ops[i], in_offs, in_signs, out_offs,
+                        out_init, dac_bits=dac_bits, adc_bits=adc_bits,
+                        fullscale=fullscale)
+        for i in range(arena.shape[0])])
+
+
 def schur_update_ref(a4, a3, w):
     """A4 - A3 @ W in f32."""
     return a4.astype(jnp.float32) - a3.astype(jnp.float32) @ w.astype(jnp.float32)

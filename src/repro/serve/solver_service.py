@@ -6,21 +6,39 @@ free): a registry of `ProgrammedSolver` handles keyed by matrix id, plus a
 per-matrix request queue so right-hand sides that arrive between flushes are
 solved in one fused `solve_many` call instead of one cascade walk each.
 
+Multi-tenant packing: `flush_all` is the cross-matrix analogue of the
+per-matrix flush.  Pending queues are grouped by `plan_signature` (the
+structural stackability key - see the packed-serving DESIGN note in
+core/blockamc.py), each bucket's arena plans are packed leaf-for-leaf on a
+leading instance axis (cached per id-set; the plans themselves are
+immutable once programmed), ragged per-tenant queue lengths are zero-padded
+to one shared power-of-two rhs width via `pad_rhs_pow2`, and the whole
+bucket dispatches as ONE `execute_arena_packed` call instead of one
+dispatch per tenant.  Answers scatter back per tenant, and per-tenant
+counters go through the single `_record` bookkeeping helper so packed
+solves are never double-counted.
+
 Deliberately synchronous and small - the batching discipline and the
 program/solve cost split are the point; transport and scheduling live a
-layer up (cf. serve/engine.py for the LM analogue).
+layer up (cf. serve/engine.py for the LM analogue and
+serve/scheduler.py's `PackedSolverScheduler` for the continuous-batching
+flush policy over this service).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.analog import AnalogConfig
-from repro.core.blockamc import ProgrammedSolver, pad_rhs_pow2
+from repro.core.blockamc import (PackedArenaPlan, ProgrammedSolver,
+                                 _execute_arena_packed_donated,
+                                 pack_arena_plans, pad_rhs_pow2,
+                                 plan_signature)
 from repro.hybrid import AnalogPreconditioner, solve_refined as _solve_refined
 
 
@@ -55,6 +73,14 @@ class SolverService:
         self._dense: Dict[str, jnp.ndarray] = {}
         self._queues: Dict[str, List[jnp.ndarray]] = {}
         self._stats: Dict[str, MatrixStats] = {}
+        self._sigs: Dict[str, tuple] = {}
+        # packed cross-tenant plans: one cached (id tuple, pack) per
+        # signature - the cache is bounded by the number of signatures,
+        # not by the 2^M possible pending subsets.  A flush whose bucket
+        # membership changed re-packs and replaces the entry; program()
+        # invalidates entries containing the re-programmed id.
+        self._packs: Dict[tuple, Tuple[Tuple[str, ...],
+                                       PackedArenaPlan]] = {}
 
     def program(self, matrix_id: str, a: jnp.ndarray,
                 key: Optional[jax.Array] = None) -> ProgrammedSolver:
@@ -88,6 +114,11 @@ class SolverService:
         self._queues[matrix_id] = []
         self._stats[matrix_id] = MatrixStats(
             program_time_s=time.perf_counter() - t0)
+        self._sigs[matrix_id] = plan_signature(a.shape[0], self.stages,
+                                               self.cfg)
+        # any cached pack containing the replaced plan is stale
+        self._packs = {sig: (ids, pp) for sig, (ids, pp)
+                       in self._packs.items() if matrix_id not in ids}
         return solver
 
     def solver(self, matrix_id: str) -> ProgrammedSolver:
@@ -96,16 +127,31 @@ class SolverService:
     def stats(self, matrix_id: str) -> MatrixStats:
         return self._stats[matrix_id]
 
+    def signature(self, matrix_id: str) -> tuple:
+        """The matrix's `plan_signature` (the flush_all bucketing key)."""
+        return self._sigs[matrix_id]
+
     @property
     def matrix_ids(self):
         return tuple(self._solvers)
 
+    def _record(self, matrix_id: str, n_rhs: int, info=None) -> None:
+        """The one per-tenant bookkeeping path: every serving entry point
+        (solve, solve_refined, flush, flush_all) counts one fused solve
+        call of `n_rhs` right-hand sides here, so no path can double-count.
+        `info` (a KrylovResult) marks the call as a hybrid refinement and
+        adds its digital iteration count."""
+        st = self._stats[matrix_id]
+        st.solve_calls += 1
+        st.rhs_served += n_rhs
+        if info is not None:
+            st.refined_calls += 1
+            st.refine_iters += int(jnp.sum(info.iters))
+
     def solve(self, matrix_id: str, b: jnp.ndarray) -> jnp.ndarray:
         """Immediate solve of one (n,) rhs or an (n, k) batch."""
         x = self._solvers[matrix_id].solve(b)
-        st = self._stats[matrix_id]
-        st.solve_calls += 1
-        st.rhs_served += 1 if b.ndim == 1 else b.shape[1]
+        self._record(matrix_id, 1 if b.ndim == 1 else b.shape[1])
         return x
 
     def solve_refined(self, matrix_id: str, b: jnp.ndarray, *,
@@ -130,8 +176,7 @@ class SolverService:
         x, info = self._refine(matrix_id, b, tol=tol, method=method,
                                maxiter=maxiter, restart=restart,
                                use_precond=use_precond)
-        self._count_refined(matrix_id, 1 if b.ndim == 1 else b.shape[1],
-                            info)
+        self._record(matrix_id, 1 if b.ndim == 1 else b.shape[1], info)
         return x
 
     def _refine(self, matrix_id: str, b: jnp.ndarray, *, tol: float = 1e-6,
@@ -144,20 +189,21 @@ class SolverService:
                               maxiter=maxiter, restart=restart,
                               use_precond=use_precond)
 
-    def _count_refined(self, matrix_id: str, n_rhs: int, info) -> None:
-        st = self._stats[matrix_id]
-        st.solve_calls += 1
-        st.rhs_served += n_rhs
-        st.refined_calls += 1
-        st.refine_iters += int(jnp.sum(info.iters))
-
     def submit(self, matrix_id: str, b: jnp.ndarray) -> int:
-        """Queue one (n,) rhs for the next flush; returns its queue slot."""
+        """Queue one (n,) rhs for the next flush; returns its queue slot.
+
+        Admission copies the rhs to the host: flushes then assemble each
+        batch as one numpy stack and pay a single device upload, instead
+        of one stacking dispatch per queued column (which dominated the
+        packed flush at production queue depths).  Always a *copy*
+        (np.array, not asarray), so a caller reusing one buffer across
+        submits cannot mutate an already-queued request.
+        """
         n = self._solvers[matrix_id].n
         if b.shape != (n,):
             raise ValueError(f"submit takes one ({n},) rhs, got {b.shape}")
         q = self._queues[matrix_id]
-        q.append(b)
+        q.append(np.array(b))
         return len(q) - 1
 
     def pending(self, matrix_id: str) -> int:
@@ -186,18 +232,118 @@ class SolverService:
             return jnp.zeros((solver.n, 0),
                              dtype=self._dense[matrix_id].dtype)
         k = len(q)
-        bs = jnp.stack(q, axis=1)
         if refined:
-            bs, _ = pad_rhs_pow2(bs)   # the one serving padding policy
+            bs, _ = pad_rhs_pow2(self._stack_queue(matrix_id))
             xs_full, info = self._refine(matrix_id, bs, **refine_kw)
             xs = xs_full[:, :k]
             # only the k real columns count as served (padding columns are
             # zero right-hand sides: they start converged, zero iterations)
-            self._count_refined(matrix_id, k, info)
+            self._record(matrix_id, k, info)
         else:
-            xs = solver.solve_many(bs, donate=True)
-            st = self._stats[matrix_id]
-            st.solve_calls += 1
-            st.rhs_served += k
+            xs = self._solve_queue(matrix_id)
+            self._record(matrix_id, k)
         self._queues[matrix_id] = []    # only drop requests once answered
         return xs
+
+    def _stack_queue(self, matrix_id: str) -> jnp.ndarray:
+        """One tenant's queue as an (n, k) device batch: one host-side
+        numpy stack + one upload (the flush assembly policy)."""
+        return jnp.asarray(np.stack(self._queues[matrix_id], axis=1))
+
+    def _solve_queue(self, matrix_id: str) -> jnp.ndarray:
+        """The one per-matrix raw-solve body (no state mutation), shared
+        by `flush` and `flush_all`'s single-tenant/reference fallback so
+        the two paths cannot drift."""
+        return self._solvers[matrix_id].solve_many(
+            self._stack_queue(matrix_id), donate=True)
+
+    def _packed_plan(self, sig: tuple,
+                     ids: Tuple[str, ...]) -> PackedArenaPlan:
+        """The packed arena plan for one tenant bucket.
+
+        One entry is cached per *signature* and reused while the bucket's
+        membership is stable (the steady state of a saturated service);
+        a different pending subset re-packs and replaces it, so the cache
+        never holds more than one pack per signature (plans are immutable
+        once programmed; program() invalidates)."""
+        cached = self._packs.get(sig)
+        if cached is not None and cached[0] == ids:
+            return cached[1]
+        pp = pack_arena_plans([self._solvers[mid].arena for mid in ids])
+        self._packs[sig] = (ids, pp)
+        return pp
+
+    def flush_all(self, matrix_ids=None):
+        """Continuous-batching flush: answer every pending rhs of every
+        matrix (or of `matrix_ids`) in one fused dispatch per signature
+        bucket.
+
+        Tenants are grouped by `plan_signature`; within a bucket, each
+        tenant's queued columns stack to (n, k_i), ragged k_i zero-pad to
+        the bucket's shared power-of-two width (`pad_rhs_pow2` - padding
+        columns are zero right-hand sides and are sliced away before
+        return), the bucket packs to an (M, n, k_pad) batch and ONE
+        `execute_arena_packed` call (buffer donated, like `flush`) answers
+        the whole fleet.  Returns {matrix_id: (n, k_id) solutions}, column
+        j answering the j-th submit since the last flush; ids with empty
+        queues are omitted.  All answers come back host-resident numpy
+        (the delivery form: one device->host transfer per bucket, one
+        small owned copy per tenant - so no answer pins the fleet buffer
+        - and per-ticket column delivery is a free numpy view) -
+        uniformly, including the fallback paths, so the result type never
+        depends on how many tenants happened to be pending.
+        Single-tenant buckets and mode="reference" services fall back to
+        the per-matrix `flush` (the packed executor is arena-form only).
+        """
+        if matrix_ids is None:
+            ids = tuple(self._queues)
+        else:
+            ids = tuple(dict.fromkeys(matrix_ids))   # dedupe, keep order
+            for mid in ids:
+                self._queues[mid]   # unknown ids raise KeyError, like solve
+        pending = [mid for mid in ids if self._queues.get(mid)]
+        buckets: Dict[tuple, List[str]] = {}
+        for mid in pending:
+            buckets.setdefault(self._sigs[mid], []).append(mid)
+        # Phase 1 - dispatch every bucket WITHOUT touching service state,
+        # so a failure in any bucket (pack error, device OOM, ...) leaves
+        # every queue and counter exactly as it was: all-or-nothing.
+        staged = []                     # (bucket ids, per-tenant ks, xs)
+        for sig, bucket in buckets.items():
+            if len(bucket) == 1 or self.mode != "fused":
+                # single-tenant / reference fallback: the same per-matrix
+                # solve body `flush` runs, staged like the packed buckets
+                for mid in bucket:
+                    staged.append(([mid], [len(self._queues[mid])],
+                                   np.asarray(self._solve_queue(mid))[None]))
+                continue
+            ks = [len(self._queues[mid]) for mid in bucket]
+            k_max = max(ks)
+            n = self._solvers[bucket[0]].n
+            # one host-side (M, n, k_max) assembly + one device upload:
+            # ragged tenants zero-pad to the bucket's widest queue; the
+            # dtype promotes over every queued column (np.stack promotes
+            # within a tenant), matching what per-matrix flushes would do
+            tenant_stacks = [np.stack(self._queues[mid], axis=1)
+                             for mid in bucket]
+            stacked = np.zeros(
+                (len(bucket), n, k_max),
+                dtype=np.result_type(*(s.dtype for s in tenant_stacks)))
+            for i, cols in enumerate(tenant_stacks):
+                stacked[i, :, :ks[i]] = cols
+            bs, _ = pad_rhs_pow2(jnp.asarray(stacked))   # (M, n, k_pad)
+            pp = self._packed_plan(sig, tuple(bucket))
+            # one device->host transfer; per-tenant scatter below is one
+            # (n, k_id) copy each, so no tenant's answer pins the whole
+            # fleet buffer in memory after delivery
+            staged.append((bucket, ks,
+                           np.asarray(_execute_arena_packed_donated(pp,
+                                                                    bs))))
+        # Phase 2 - every dispatch succeeded: commit queues and counters.
+        results: Dict[str, np.ndarray] = {}
+        for bucket, ks, xs_host in staged:
+            for i, (mid, k) in enumerate(zip(bucket, ks)):
+                results[mid] = xs_host[i, :, :k].copy()
+                self._record(mid, k)
+                self._queues[mid] = []   # only drop requests once answered
+        return results

@@ -206,6 +206,30 @@ def mc_solve_specs(axis_name: str = "mc"):
     return (P(), P(), P(axis_name)), P(axis_name)
 
 
+def mc_packed_specs(pp, axis_name: str = "mc"):
+    """shard_map specs for a packed multi-tenant arena execution.
+
+    `(packed_plan, bs) -> xs`: every instance-carrying leaf of the
+    `PackedArenaPlan` (operator stacks, scales, per-instance whole-schedule
+    operator sequence) and the (M, n, k) rhs stack shard their leading
+    instance axis over `axis_name`; the shared window-program metadata
+    (identical across instances by the signature-stackability invariant)
+    is replicated.  The spec tree mirrors the plan's pytree structure, so
+    it must be built from the concrete plan being dispatched.
+    """
+    inst, rep = P(axis_name), P()
+    children, aux = pp.tree_flatten()
+    stacks, scale, program_ops, program_meta = children
+    spec_children = (
+        tuple(inst for _ in stacks),
+        inst,
+        None if program_ops is None else inst,
+        None if program_meta is None else tuple(rep for _ in program_meta),
+    )
+    plan_spec = type(pp).tree_unflatten(aux, spec_children)
+    return (plan_spec, P(axis_name)), P(axis_name)
+
+
 def mc_refined_specs(axis_name: str = "mc"):
     """shard_map specs for a Monte-Carlo *hybrid refined* solve.
 

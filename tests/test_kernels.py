@@ -178,6 +178,67 @@ def test_arena_kernel_runs_whole_cascade():
         rtol=1e-6, atol=1e-7)
 
 
+def _arena_packed_inputs(m=3, s=96, k=8, t=5, r=16, c=16, terms=2, seed=11):
+    """Shared (T, ...) window metadata, per-instance (M, T, R, C) ops."""
+    _, opstack, in_offs, in_signs, out_offs, out_init = \
+        _arena_level_inputs(s=s, k=k, l=t, r=r, c=c, terms=terms, seed=seed)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    arena = jax.random.normal(k1, (m, s, k))
+    ops_m = jax.random.normal(k2, (m, t, r, c)) / c
+    return arena, ops_m, in_offs, in_signs, out_offs, out_init
+
+
+@pytest.mark.parametrize("dac,adc", [(None, None), (8, 8)])
+def test_arena_packed_matches_ref(dac, adc):
+    """Instance-packed megakernel (interpret on CPU) == per-instance
+    oracle replay of the shared tile program."""
+    args = _arena_packed_inputs()
+    out = ops.arena_packed_apply(*args, dac_bits=dac, adc_bits=adc)
+    expect = ref.arena_packed_ref(*args, dac_bits=dac, adc_bits=adc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_arena_packed_matches_per_instance_level_calls():
+    """The instance grid axis changes the dispatch, not the numbers: the
+    packed kernel == M independent `arena_level_apply` runs of the same
+    program."""
+    arena, ops_m, in_offs, in_signs, out_offs, out_init = \
+        _arena_packed_inputs(m=4)
+    out = ops.arena_packed_apply(arena, ops_m, in_offs, in_signs,
+                                 out_offs, out_init)
+    for i in range(arena.shape[0]):
+        one = ref.arena_level_ref(arena[i], ops_m[i], in_offs, in_signs,
+                                  out_offs, out_init)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_arena_packed_kernel_runs_whole_fleet():
+    """One pallas_call executes the full uniform schedule of a packed
+    multi-tenant fleet - pinned against the stacked slot-SSA path."""
+    from repro.core import blockamc
+    from repro.core.analog import AnalogConfig
+    from repro.core.nonideal import NonidealConfig
+    from repro.data.matrices import wishart
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05),
+                       opa_gain=1e4)
+    m, n = 3, 32
+    keys = jax.random.split(jax.random.PRNGKey(2), m)
+    As = jnp.stack([wishart(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                            n) for i in range(m)])
+    pp = blockamc.program_packed(As, keys, cfg, stages=2)
+    assert pp.program_ops is not None
+    for bs in (jax.random.normal(jax.random.PRNGKey(3), (m, n)),
+               jax.random.normal(jax.random.PRNGKey(4), (m, n, 3))):
+        np.testing.assert_allclose(
+            np.asarray(blockamc.execute_arena_packed(pp, bs,
+                                                     use_kernel=True)),
+            np.asarray(blockamc.execute_arena_packed(pp, bs,
+                                                     use_kernel=False)),
+            rtol=1e-6, atol=1e-7)
+
+
 # ------------------------------- schur_gemm -------------------------------
 
 @pytest.mark.parametrize("i,j,k", [

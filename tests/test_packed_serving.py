@@ -1,0 +1,412 @@
+"""Multi-tenant packed serving: the packed-vs-loop equivalence contract.
+
+The contract (TESTING.md "packed serving contract"): packing M
+same-signature arena plans on a leading instance axis and executing the
+fleet with `execute_arena_packed` answers every tenant with exactly the
+numbers its own `execute_arena` produces - bit-for-bit when both run
+eagerly on CPU on aligned power-of-two plans (batching the stacked-tile
+dots over the instance axis neither reassociates any per-instance
+reduction nor changes the per-slice dot kernel), last-ulp float tolerance
+on ragged odd splits and under jit (XLA dot merging).  On top sit the serving paths: `SolverService.flush_all`
+groups pending queues by `plan_signature`, pads ragged per-tenant queue
+lengths to one shared power-of-two width and scatters per-tenant answers
+back, and `PackedSolverScheduler` drives that flush with a
+continuous-batching admission policy.
+
+Signature bucketing properties (same signature => identical schedule +
+arena layout) live in tests/test_plan_properties.py; packed megakernel
+parity in tests/test_kernels.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import wishart
+from repro.serve import PackedSolverScheduler, SolverService
+
+KEY = jax.random.PRNGKey(23)
+KA, KB, KN = jax.random.split(KEY, 3)
+
+
+def _fleet(m, n, cfg, stages):
+    """M programmed instances: matrices, keys, per-instance arena plans."""
+    keys = jax.random.split(KN, m)
+    As = jnp.stack([wishart(jax.random.fold_in(KA, i), n) for i in range(m)])
+    aps = [blockamc.compile_arena(blockamc.finalize(
+        blockamc.build_flat_plan(As[i], keys[i], cfg, stages=stages), cfg))
+        for i in range(m)]
+    return As, keys, aps
+
+
+REGIMES = [
+    ("sigma", lambda n: AnalogConfig(
+        array_size=max(n // 4, 4), nonideal=NonidealConfig(sigma=0.05))),
+    ("wire", lambda n: AnalogConfig(
+        array_size=max(n // 4, 4),
+        nonideal=NonidealConfig(sigma=0.05, r_wire=1.0))),
+    ("gain", lambda n: AnalogConfig(
+        array_size=max(n // 4, 4), opa_gain=1e4)),
+]
+
+
+@pytest.mark.parametrize("n,stages", [(32, 2), (17, 1)])
+@pytest.mark.parametrize("tag,make_cfg", REGIMES)
+@pytest.mark.parametrize("multi_rhs", [False, True])
+def test_packed_matches_per_instance_loop(n, stages, tag, make_cfg,
+                                          multi_rhs):
+    """Each tenant's packed solution == its own execute_arena: bit-for-bit
+    eager on CPU, float tolerance jitted.  n=17 exercises ragged odd
+    splits (no uniform program; levels path)."""
+    cfg = make_cfg(n)
+    m = 3
+    _, _, aps = _fleet(m, n, cfg, stages)
+    pp = blockamc.pack_arena_plans(aps)
+    assert pp.num_instances == m
+    bs = (jax.random.normal(KB, (m, n, 4)) if multi_rhs
+          else jax.random.normal(KB, (m, n)))
+    xs = blockamc.execute_arena_packed(pp, bs, use_kernel=False)
+    xs_loop = jnp.stack([
+        blockamc.execute_arena(aps[i], bs[i], use_kernel=False)
+        for i in range(m)])
+    if jax.default_backend() == "cpu" and n == 32:
+        # aligned power-of-two plans: the batched dots compute each
+        # instance slice with the same kernel as the unbatched dot
+        np.testing.assert_array_equal(np.asarray(xs), np.asarray(xs_loop))
+    else:
+        # ragged odd splits: XLA:CPU's batched matmul may take a
+        # different code path per slice on odd tile sizes - last-ulp only
+        np.testing.assert_allclose(np.asarray(xs), np.asarray(xs_loop),
+                                   rtol=1e-5, atol=1e-6)
+    xs_jit = blockamc._execute_arena_packed(pp, bs)
+    np.testing.assert_allclose(np.asarray(xs_jit), np.asarray(xs_loop),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_batched_programming_matches_sequential():
+    """program_packed (one vmapped trace) == the sequential per-matrix
+    pipeline at float tolerance, and still solves every system."""
+    m, n, stages = 4, 32, 2
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    As, keys, aps = _fleet(m, n, cfg, stages)
+    pp = blockamc.program_packed(As, keys, cfg, stages=stages)
+    assert pp.num_instances == m
+    bs = jax.random.normal(KB, (m, n, 2))
+    xs = blockamc.execute_arena_packed(pp, bs, use_kernel=False)
+    xs_seq = blockamc.execute_arena_packed(blockamc.pack_arena_plans(aps),
+                                           bs, use_kernel=False)
+    # same matrices, same noise keys; the batched pipeline runs under
+    # jit/vmap, so agreement is float-tolerance (XLA reassociation in the
+    # programming math), not bitwise
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xs_seq),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_batched_programming_stages_align():
+    """The batched pipeline builders compose: pack_partitioned +
+    program_system_batched + finalize_batched + compile_arena_batched ==
+    program_packed."""
+    m, n, stages = 3, 16, 1
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.02))
+    As, keys, _ = _fleet(m, n, cfg, stages)
+    parts = blockamc.pack_partitioned(
+        [blockamc.partition_system(As[i], cfg, stages) for i in range(m)])
+    fplans = blockamc.program_system_batched(parts, keys, cfg)
+    pp = blockamc.compile_arena_batched(
+        blockamc.finalize_batched(fplans, cfg))
+    pp2 = blockamc.program_packed(As, keys, cfg, stages=stages)
+    bs = jax.random.normal(KB, (m, n, 2))
+    np.testing.assert_allclose(
+        np.asarray(blockamc.execute_arena_packed(pp, bs, use_kernel=False)),
+        np.asarray(blockamc.execute_arena_packed(pp2, bs,
+                                                 use_kernel=False)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_pack_rejects_mismatched_signatures():
+    """Plans compiled from different (n, stages, cfg) cannot share one
+    packed program and must be refused loudly."""
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    _, _, aps16 = _fleet(1, 16, cfg, 1)
+    _, _, aps32 = _fleet(1, 32, cfg, 1)
+    with pytest.raises(ValueError, match="not stackable"):
+        blockamc.pack_arena_plans([aps16[0], aps32[0]])
+    with pytest.raises(ValueError, match="at least one"):
+        blockamc.pack_arena_plans([])
+
+
+def test_packed_plan_is_pytree():
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    _, _, aps = _fleet(2, 16, cfg, 1)
+    pp = blockamc.pack_arena_plans(aps)
+    leaves, treedef = jax.tree_util.tree_flatten(pp)
+    pp2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    bs = jax.random.normal(KB, (2, 16, 2))
+    np.testing.assert_array_equal(
+        np.asarray(blockamc.execute_arena_packed(pp, bs, use_kernel=False)),
+        np.asarray(blockamc.execute_arena_packed(pp2, bs,
+                                                 use_kernel=False)))
+    hash(treedef)   # shared static metadata stays a valid jit cache key
+
+
+def test_packed_kernel_rejects_nonuniform():
+    """use_kernel=True on a plan without a whole-schedule program must
+    fail loudly, exactly like the single-instance executor."""
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    _, _, aps = _fleet(2, 17, cfg, 1)      # ragged split: program is None
+    pp = blockamc.pack_arena_plans(aps)
+    assert pp.program_ops is None
+    with pytest.raises(ValueError, match="uniform"):
+        blockamc.execute_arena_packed(pp, jax.random.normal(KB, (2, 17)),
+                                      use_kernel=True)
+
+
+def test_packed_sharded_matches_unsharded():
+    """Instance axis over a (1-device) mc mesh == the plain packed path."""
+    from repro.launch.mesh import make_mc_mesh
+    cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+    m, n = 4, 16
+    _, _, aps = _fleet(m, n, cfg, 1)
+    pp = blockamc.pack_arena_plans(aps)
+    bs = jax.random.normal(KB, (m, n, 3))
+    xs = blockamc.execute_arena_packed(pp, bs, use_kernel=False)
+    xs_sh = blockamc.execute_arena_packed_sharded(pp, bs,
+                                                  mesh=make_mc_mesh(1))
+    np.testing.assert_allclose(np.asarray(xs_sh), np.asarray(xs),
+                               rtol=1e-6, atol=1e-7)
+    # (the num_instances divisibility error needs a >1-device mesh; the
+    # slow multi-device subprocess test below covers genuine sharding)
+
+
+@pytest.mark.slow
+def test_packed_sharded_multidevice():
+    """Instance axis genuinely sharded over 4 host devices (subprocess:
+    XLA device count must be set before jax initialises)."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = """
+import jax, jax.numpy as jnp
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import wishart
+ka, kb, kn = jax.random.split(jax.random.PRNGKey(3), 3)
+cfg = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.05))
+m, n = 8, 32
+keys = jax.random.split(kn, m)
+As = jnp.stack([wishart(jax.random.fold_in(ka, i), n) for i in range(m)])
+pp = blockamc.program_packed(As, keys, cfg, stages=2)
+bs = jax.random.normal(kb, (m, n, 4))
+xs = blockamc.execute_arena_packed(pp, bs, use_kernel=False)
+xs_sh = blockamc.execute_arena_packed_sharded(pp, bs)
+assert jnp.allclose(xs_sh, xs, rtol=1e-5, atol=1e-6)
+pp6 = blockamc.program_packed(As[:6], keys[:6], cfg, stages=2)
+try:
+    blockamc.execute_arena_packed_sharded(pp6, bs[:6])
+except ValueError as e:
+    assert "divide" in str(e)
+else:
+    raise SystemExit("divisibility error not raised")
+print('OK', xs_sh.shape)
+"""
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# SolverService.flush_all + scheduler
+# ---------------------------------------------------------------------------
+
+N = 32
+CFG = AnalogConfig(array_size=8, nonideal=NonidealConfig(sigma=0.02))
+
+
+def _service(m=4, n=N, stages=2):
+    svc = SolverService(CFG, stages=stages)
+    ids = [f"m{i}" for i in range(m)]
+    for i, mid in enumerate(ids):
+        svc.program(mid, wishart(jax.random.fold_in(KA, i), n),
+                    jax.random.fold_in(KN, i))
+    return svc, ids
+
+
+def test_flush_all_ragged_bucket_matches_individual_solves():
+    """Mixed per-tenant queue lengths: one packed dispatch answers every
+    tenant with its own solver's numbers, pads never leak, counters count
+    each rhs exactly once."""
+    svc, ids = _service(m=4)
+    counts = dict(zip(ids, (3, 5, 1, 8)))
+    cols = {}
+    for mid in ids:
+        cols[mid] = [jax.random.normal(jax.random.fold_in(KB, 100 * int(
+            mid[1:]) + j), (N,)) for j in range(counts[mid])]
+        for b in cols[mid]:
+            svc.submit(mid, b)
+    expected = {mid: jnp.stack([svc.solver(mid).solve(b)
+                                for b in cols[mid]], axis=1) for mid in ids}
+    out = svc.flush_all()
+    assert set(out) == set(ids)
+    for mid in ids:
+        assert out[mid].shape == (N, counts[mid])
+        np.testing.assert_allclose(np.asarray(out[mid]),
+                                   np.asarray(expected[mid]),
+                                   rtol=1e-5, atol=1e-6)
+        assert svc.pending(mid) == 0
+        st = svc.stats(mid)
+        assert st.solve_calls == 1                # one packed dispatch
+        assert st.rhs_served == counts[mid]       # no double counting
+    assert svc.flush_all() == {}                  # nothing left pending
+
+
+def test_flush_all_matches_flush_loop():
+    """flush_all == a loop of per-matrix flushes, tenant for tenant."""
+    svc_a, ids = _service(m=3)
+    svc_b, _ = _service(m=3)
+    cols = {mid: [jax.random.normal(jax.random.fold_in(KB, 7 * i + j), (N,))
+                  for j in range(4)] for i, mid in enumerate(ids)}
+    for mid in ids:
+        for b in cols[mid]:
+            svc_a.submit(mid, b)
+            svc_b.submit(mid, b)
+    packed = svc_a.flush_all()
+    for mid in ids:
+        loop = svc_b.flush(mid)
+        np.testing.assert_allclose(np.asarray(packed[mid]),
+                                   np.asarray(loop), rtol=1e-5, atol=1e-6)
+        assert svc_a.stats(mid).rhs_served == svc_b.stats(mid).rhs_served
+
+
+def test_flush_all_mixed_signatures_and_singletons():
+    """Tenants of different sizes land in different signature buckets;
+    a single-tenant bucket falls back to the per-matrix flush."""
+    svc = SolverService(CFG, stages=1)
+    a16 = [wishart(jax.random.fold_in(KA, i), 16) for i in range(2)]
+    a32 = wishart(jax.random.fold_in(KA, 9), 32)
+    svc.program("s0", a16[0], jax.random.fold_in(KN, 0))
+    svc.program("s1", a16[1], jax.random.fold_in(KN, 1))
+    svc.program("big", a32, jax.random.fold_in(KN, 2))
+    assert svc.signature("s0") == svc.signature("s1")
+    assert svc.signature("s0") != svc.signature("big")
+    b16 = [jax.random.normal(jax.random.fold_in(KB, j), (16,))
+           for j in range(3)]
+    b32 = jax.random.normal(KB, (32,))
+    for b in b16:
+        svc.submit("s0", b)
+    svc.submit("s1", b16[0])
+    svc.submit("big", b32)
+    out = svc.flush_all()
+    assert out["s0"].shape == (16, 3)
+    assert out["s1"].shape == (16, 1)
+    assert out["big"].shape == (32, 1)
+    np.testing.assert_allclose(np.asarray(out["big"][:, 0]),
+                               np.asarray(svc.solver("big").solve(b32)),
+                               rtol=1e-5, atol=1e-6)
+    # subset flush: only the requested ids are answered
+    svc.submit("s0", b16[0])
+    svc.submit("big", b32)
+    out = svc.flush_all(matrix_ids=["big"])
+    assert set(out) == {"big"} and svc.pending("s0") == 1
+    # unknown ids raise like every other entry point (never silently skip)
+    with pytest.raises(KeyError):
+        svc.flush_all(matrix_ids=["big", "nope"])
+
+
+def test_flush_all_reference_mode_falls_back():
+    """mode="reference" services keep the finalized executor: flush_all
+    still answers everything (per-matrix path, no packing)."""
+    svc = SolverService(CFG, stages=1, mode="reference")
+    for i in range(2):
+        svc.program(f"m{i}", wishart(jax.random.fold_in(KA, i), N),
+                    jax.random.fold_in(KN, i))
+    for i in range(2):
+        svc.submit(f"m{i}", jax.random.normal(jax.random.fold_in(KB, i),
+                                              (N,)))
+    out = svc.flush_all()
+    assert set(out) == {"m0", "m1"}
+    assert all(out[mid].shape == (N, 1) for mid in out)
+    assert not svc._packs                         # nothing was packed
+
+
+def test_reprogram_invalidates_pack_cache():
+    """Re-programming a tenant drops every cached pack containing it, so
+    the next flush_all packs the new plan (and solves the new matrix).
+    The cache holds one (id tuple, pack) per signature."""
+    svc, ids = _service(m=2)
+    for mid in ids:
+        svc.submit(mid, jax.random.normal(KB, (N,)))
+    svc.flush_all()
+    assert [ids_ for ids_, _ in svc._packs.values()] == [tuple(ids)]
+    a_new = wishart(jax.random.fold_in(KA, 77), N)
+    svc.program(ids[0], a_new, jax.random.fold_in(KN, 77))
+    assert not svc._packs
+    b = jax.random.normal(jax.random.fold_in(KB, 5), (N,))
+    for mid in ids:
+        svc.submit(mid, b)
+    out = svc.flush_all()
+    np.testing.assert_allclose(np.asarray(out[ids[0]][:, 0]),
+                               np.asarray(svc.solver(ids[0]).solve(b)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scheduler_continuous_batching_flush():
+    """PackedSolverScheduler fires a signature bucket the moment it holds
+    max_batch pending rhs, leaves other buckets filling, and drains the
+    stragglers on demand."""
+    svc, ids = _service(m=3)
+    sched = PackedSolverScheduler(svc, max_batch=4)
+    b = [jax.random.normal(jax.random.fold_in(KB, j), (N,))
+         for j in range(6)]
+    t0 = sched.submit(ids[0], b[0])
+    t1 = sched.submit(ids[0], b[1])
+    t2 = sched.submit(ids[1], b[2])
+    assert sched.pending() == 3 and not sched.ready(t0)
+    t3 = sched.submit(ids[2], b[3])               # 4th pending -> flush
+    assert sched.pending() == 0
+    for t, bj in zip((t0, t1, t2, t3), b[:4]):
+        assert sched.ready(t)
+    np.testing.assert_allclose(np.asarray(sched.result(t1)),
+                               np.asarray(svc.solver(ids[0]).solve(b[1])),
+                               rtol=1e-5, atol=1e-6)
+    assert not sched.ready(t1)                    # one-shot delivery
+    # stragglers drain explicitly; tickets stay unique across generations
+    t4 = sched.submit(ids[1], b[4])
+    assert t4 == (ids[1], 1) and sched.pending() == 1
+    sched.drain()
+    assert sched.pending() == 0 and sched.ready(t4)
+    np.testing.assert_allclose(np.asarray(sched.result(t4)),
+                               np.asarray(svc.solver(ids[1]).solve(b[4])),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scheduler_detects_external_queue_writes():
+    """The scheduler owns its service's queues: ticket->column mapping is
+    per-tenant submission order, so a direct service.submit alongside a
+    scheduler must fail loudly at delivery, never mis-assign answers."""
+    svc, ids = _service(m=2)
+    sched = PackedSolverScheduler(svc, max_batch=8)
+    b = jax.random.normal(KB, (N,))
+    t_stale = sched.submit(ids[0], b)
+    svc.submit(ids[0], b)          # bypasses the scheduler
+    with pytest.raises(RuntimeError, match="outside this scheduler"):
+        sched.drain()
+    # the violated tenant's open tickets are void, its counters resynced:
+    # a caller that catches the error and keeps going gets fresh answers
+    # on fresh tickets, never a later flush landing on the stale one
+    assert not sched.ready(t_stale) and sched.pending() == 0
+    b2 = jax.random.normal(jax.random.fold_in(KB, 9), (N,))
+    t_new = sched.submit(ids[0], b2)
+    sched.drain()
+    assert not sched.ready(t_stale) and sched.ready(t_new)
+    np.testing.assert_allclose(np.asarray(sched.result(t_new)),
+                               np.asarray(svc.solver(ids[0]).solve(b2)),
+                               rtol=1e-5, atol=1e-6)

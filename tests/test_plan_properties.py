@@ -224,6 +224,78 @@ def test_plan_invariants_random(n, stages, noisy):
     _build_and_check(n, stages, sigma=0.05 if noisy else 0.0)
 
 
+# ---------------------------------------------------------------------------
+# plan_signature: the packed-serving stackability key
+# ---------------------------------------------------------------------------
+
+def _structural_fingerprint(a, cfg, stages):
+    """Every static artifact of the compile pipeline for one matrix - what
+    two same-signature matrices must share exactly for their plans to pack
+    on one instance axis (the stackability invariant, DESIGN note in
+    core/blockamc.py)."""
+    fplan = blockamc.compile_plan(blockamc.build_plan(a, KN, cfg,
+                                                      stages=stages))
+    ap = blockamc.compile_arena(blockamc.finalize(fplan, cfg))
+    leaf_shapes = tuple(s.shape for s in ap.stacks)
+    return (fplan.schedule, fplan.inv_keys, fplan.mvm_keys, leaf_shapes,
+            ap.levels, ap.out_spec, ap.slot_offsets, ap.slot_ranges,
+            ap.arena_size, ap.in_off, ap.kernel_ok)
+
+
+def _check_signature_bucketing(n, stages, sigma):
+    cfg = AnalogConfig(array_size=max(-(-n // max(2 ** max(stages, 1), 1)),
+                                      2),
+                       nonideal=NonidealConfig(sigma=sigma))
+    sig = blockamc.plan_signature(n, stages, cfg)
+    assert sig == blockamc.plan_signature(n, stages, cfg)
+    hash(sig)                       # usable as a flush_all bucket key
+    # same signature => two *different random matrices* compile to
+    # identical schedules, bucket shapes and arena layouts
+    a1 = wishart(jax.random.fold_in(KA, 1000 + n), n)
+    a2 = wishart(jax.random.fold_in(KA, 2000 + n), n)
+    assert _structural_fingerprint(a1, cfg, stages) == \
+        _structural_fingerprint(a2, cfg, stages)
+    # ...and therefore genuinely stack (pack_arena_plans accepts them)
+    aps = [blockamc.compile_arena(blockamc.finalize(
+        blockamc.compile_plan(blockamc.build_plan(a, KN, cfg,
+                                                  stages=stages)), cfg))
+        for a in (a1, a2)]
+    pp = blockamc.pack_arena_plans(aps)
+    assert pp.num_instances == 2
+    # different problem shape => different signature
+    assert blockamc.plan_signature(n + 1, stages, cfg) != sig
+    if stages > 0:
+        assert blockamc.plan_signature(n, stages - 1, cfg) != sig
+    assert blockamc.plan_signature(
+        n, stages, cfg.with_(array_size=cfg.array_size + 1)) != sig
+
+
+@pytest.mark.parametrize("n,stages", [(16, 1), (17, 1), (32, 2), (33, 2)])
+def test_signature_bucketing_fixed(n, stages):
+    _check_signature_bucketing(n, stages, sigma=0.05)
+
+
+@given(n=st.integers(min_value=6, max_value=40),
+       stages=st.integers(min_value=0, max_value=3),
+       noisy=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_signature_bucketing_random(n, stages, noisy):
+    """Random (n, stages): equal signatures imply identical schedule +
+    arena layout across different matrices; unequal n/stages/array_size
+    hash apart."""
+    _check_signature_bucketing(n, stages, sigma=0.05 if noisy else 0.0)
+
+
+def test_signature_resolves_auto_stages():
+    """stages=None buckets with the explicitly resolved depth, exactly
+    like partition_system."""
+    cfg = AnalogConfig(array_size=16)
+    n = 64
+    depth = blockamc.required_stages(n, cfg.array_size)
+    assert blockamc.plan_signature(n, None, cfg) == \
+        blockamc.plan_signature(n, depth, cfg)
+
+
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 def test_hypothesis_is_exercised_in_ci():
     """Guard: CI installs hypothesis, so the property tests above run

@@ -47,6 +47,23 @@ def test_submit_rejects_mismatched_rhs():
     assert svc.pending("m0") == 0               # rejected before queueing
 
 
+def test_submit_snapshots_the_rhs_buffer():
+    """Admission must copy: a caller reusing (and mutating) one buffer
+    across submits cannot corrupt an already-queued request."""
+    svc, _ = _service()
+    buf = np.arange(N, dtype=np.float32)
+    # expectation from an independent buffer: jnp.asarray(np_buf) may be
+    # zero-copy on CPU, so solving from `buf` itself would race the
+    # mutation below inside jax's async dispatch
+    want = svc.solver("m0").solve(jnp.asarray(np.arange(N,
+                                                        dtype=np.float32)))
+    svc.submit("m0", buf)
+    buf[:] = 0.0                    # caller reuses the buffer
+    xs = svc.flush("m0")
+    np.testing.assert_allclose(np.asarray(xs[:, 0]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_unknown_matrix_id_raises():
     svc, _ = _service()
     with pytest.raises(KeyError):
