@@ -7,7 +7,9 @@ artifacts/bench/ consumed by EXPERIMENTS.md.
   fig6  - ideal-mapping accuracy (finite OPA gain), step cascade
   fig7  - device variation, Wishart/Toeplitz, 40 sims
   fig8  - two-stage solver
-  fig9  - variation + interconnect resistance
+  fig9  - variation + interconnect resistance (cheap-vs-oracle columns;
+          --wire-oracle prices every column with the exact nodal model)
+  fig9_oracle - opt-in n >= 64 exact-MNA sweep (nightly artifact)
   fig10 - area/power breakdown + macro timing model
   hybrid, distributed, kernels - beyond-figure system benchmarks
 
@@ -45,7 +47,14 @@ def main() -> None:
     ap.add_argument("--bench-tenants", type=int, default=None,
                     help="tenant count for the multi-tenant packed bench "
                          "(default: 4 in smoke mode, 4 and 16 otherwise)")
+    ap.add_argument("--wire-oracle", action="store_true",
+                    help="price interconnect with the exact nodal MNA "
+                         "oracle (repro.physics) instead of the first-order "
+                         "model, at every fig9 size and column")
     args = ap.parse_args()
+
+    if args.wire_oracle:
+        fig9_interconnect.WIRE_ORACLE = True
 
     if args.bench_warmup is not None:
         common.TIMED_WARMUP = args.bench_warmup
@@ -65,6 +74,7 @@ def main() -> None:
         fig8_twostage.SIZES = (64, 128, 256)
         fig9_interconnect.N_SIMS_PAPER = 8
         fig9_interconnect.SIZES = (16, 32, 64, 128)
+        fig9_interconnect.ORACLE_SIZES = (64, 128)
         fig6_accuracy.SIZES_PAPER = common.SIZES_PAPER
 
     if args.smoke:            # after fast-mode defaults: smoke tightens them
@@ -78,6 +88,8 @@ def main() -> None:
         fig8_twostage.SIZES = (64,)
         fig9_interconnect.N_SIMS_PAPER = 4
         fig9_interconnect.SIZES = (16, 32)
+        fig9_interconnect.ORACLE_SIZES = (64,)
+        fig9_interconnect.ORACLE_SIMS = 2
         fig6_accuracy.SIZES_PAPER = common.SIZES_PAPER
 
     suites = {
@@ -85,12 +97,16 @@ def main() -> None:
         "fig7": fig7_variation.main,
         "fig8": fig8_twostage.main,
         "fig9": fig9_interconnect.main,
+        "fig9_oracle": fig9_interconnect.oracle_main,
         "fig10": fig10_area_power.main,
         "hybrid": hybrid_refinement.main,
         "distributed": distributed_solver.main,
         "kernels": kernel_bench.main,
     }
-    chosen = (args.only.split(",") if args.only else list(suites))
+    # fig9_oracle is opt-in (--only): the exact-MNA sweep at n >= 64 is a
+    # nightly artifact, too heavy for the default minutes-long suite.
+    default = [s for s in suites if s != "fig9_oracle"]
+    chosen = (args.only.split(",") if args.only else default)
     print("name,us_per_call,derived")
     for name in chosen:
         suites[name]()

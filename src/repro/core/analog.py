@@ -23,7 +23,6 @@ paper's accuracy study isolates device/wire effects).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -93,12 +92,13 @@ class CrossbarPair:
         return self.gpos.shape
 
     def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
-        """The matrix the circuit actually computes with (incl. wire model)."""
+        """The matrix the circuit actually computes with: retention drift on
+        the device state, then the configured wire model ("first_order" hot
+        path or the exact "nodal" oracle) - the one readout pipeline shared
+        with TileGrid, so all four executors see identical physics."""
         ni = cfg.nonideal
-        gp, gn = self.gpos, self.gneg
-        if ni.wire_model == "first_order" and ni.r_wire > 0.0:
-            gp = nonideal.effective_conductance(gp, ni.r_wire)
-            gn = nonideal.effective_conductance(gn, ni.r_wire)
+        gp = nonideal.wire_readout(nonideal.readout_conductance(self.gpos, ni), ni)
+        gn = nonideal.wire_readout(nonideal.readout_conductance(self.gneg, ni), ni)
         return (gp - gn) / self.g0
 
 
@@ -112,15 +112,10 @@ def map_matrix(a_block: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
     a_norm = a_block * scale
     gpos_t = jnp.maximum(a_norm, 0.0) * cfg.g0   # target conductances
     gneg_t = jnp.maximum(-a_norm, 0.0) * cfg.g0
-    ni = cfg.nonideal
-    if ni.compensate_wire and ni.r_wire > 0.0:
-        # write-verify against the wire model (ref [29] mitigation)
-        gpos_t = nonideal.compensate_conductances(gpos_t, ni.r_wire)
-        gneg_t = nonideal.compensate_conductances(gneg_t, ni.r_wire)
     kp, kn = jax.random.split(key)
-    sigma_g = ni.sigma * cfg.g0
-    gpos = nonideal.apply_variation(gpos_t, kp, sigma_g)
-    gneg = nonideal.apply_variation(gneg_t, kn, sigma_g)
+    # one programming pipeline (write-verify -> write noise -> stuck faults)
+    gpos = nonideal.program_conductances(gpos_t, kp, cfg.nonideal, cfg.g0)
+    gneg = nonideal.program_conductances(gneg_t, kn, cfg.nonideal, cfg.g0)
     return CrossbarPair(gpos, gneg, scale, cfg.g0)
 
 
@@ -316,18 +311,11 @@ class TileGrid:
         return self.gpos.shape
 
     def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
+        # same readout pipeline as CrossbarPair.a_eff (drift, then wire
+        # model); nonideal.wire_readout maps over the leading tile axes
         ni = cfg.nonideal
-        gp, gn = self.gpos, self.gneg
-        if ni.wire_model == "first_order" and ni.r_wire > 0.0:
-            fo = partial(nonideal.effective_conductance, r_seg=ni.r_wire)
-            lead = gp.shape[:-2]
-            if lead:
-                flat = gp.reshape((-1,) + gp.shape[-2:])
-                gp = jax.vmap(fo)(flat).reshape(gp.shape)
-                flat = gn.reshape((-1,) + gn.shape[-2:])
-                gn = jax.vmap(fo)(flat).reshape(gn.shape)
-            else:
-                gp, gn = fo(gp), fo(gn)
+        gp = nonideal.wire_readout(nonideal.readout_conductance(self.gpos, ni), ni)
+        gn = nonideal.wire_readout(nonideal.readout_conductance(self.gneg, ni), ni)
         return (gp - gn) / self.g0
 
     def pair(self, idx) -> CrossbarPair:
@@ -357,7 +345,8 @@ def map_tiled_vec(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
     gpos_t = jnp.maximum(a_norm, 0.0) * cfg.g0
     gneg_t = jnp.maximum(-a_norm, 0.0) * cfg.g0
     kp, kn = jax.random.split(key)
-    sg = cfg.nonideal.sigma * cfg.g0
-    gpos = nonideal.apply_variation(gpos_t, kp, sg)
-    gneg = nonideal.apply_variation(gneg_t, kn, sg)
+    # shared programming pipeline (this path previously skipped write-verify;
+    # it now honours compensate_wire like map_matrix does)
+    gpos = nonideal.program_conductances(gpos_t, kp, cfg.nonideal, cfg.g0)
+    gneg = nonideal.program_conductances(gneg_t, kn, cfg.nonideal, cfg.g0)
     return TileGrid(gpos, gneg, scale, cfg.g0)

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -159,7 +160,9 @@ def mna_mvm_currents(g, v_in, r_seg: float):
     """Exact sense currents of the MVM crossbar (TIA inputs at 0 V).
 
     Returns I[i], the current flowing into the virtual ground of row i.
-    Ideal limit (r_seg -> 0): I = g @ v_in.  Numpy float64 oracle.
+    Ideal limit (r_seg -> 0): I = g @ v_in.  Numpy float64 oracle: the
+    return value is a float64 numpy array regardless of jax's x64 mode
+    (a `jnp.asarray` here used to truncate the oracle to f32).
     """
     import numpy as np
     L, drive, sense = _crossbar_laplacian(g, r_seg)
@@ -168,12 +171,13 @@ def mna_mvm_currents(g, v_in, r_seg: float):
     # already folded into L's diagonal via the sense coupling).
     v = np.linalg.solve(L, drive @ v_in)
     # Current into each virtual ground = gw * v(w(i, nc-1)).
-    return jnp.asarray(sense.T @ v)
+    return sense.T @ v
 
 
-def mna_inv_outputs(g: jnp.ndarray, v_in: jnp.ndarray, r_seg: float,
-                    g0: float) -> jnp.ndarray:
+def mna_inv_outputs(g, v_in, r_seg: float, g0: float):
     """Exact OPA output voltages of the INV circuit with wire resistance.
+    Returns a float64 numpy array (full-precision oracle, like
+    `mna_mvm_currents`).
 
     Circuit (paper Fig. 1b): v_in[i] injected through a G0 resistor into word
     line i's summing node; OPA i senses that node (ideal virtual ground) and
@@ -203,7 +207,7 @@ def mna_inv_outputs(g: jnp.ndarray, v_in: jnp.ndarray, r_seg: float,
     M = np.concatenate([top, bot], axis=0)
     rhs = np.concatenate([np.zeros((n_nodes,)), -g0 * v_in])
     sol = np.linalg.solve(M, rhs)
-    return jnp.asarray(sol[n_nodes:])
+    return sol[n_nodes:]
 
 
 # ---------------------------------------------------------------------------
@@ -212,12 +216,42 @@ def mna_inv_outputs(g: jnp.ndarray, v_in: jnp.ndarray, r_seg: float,
 
 @dataclasses.dataclass(frozen=True)
 class NonidealConfig:
-    """Knobs for the analog non-ideality models (paper Section IV defaults)."""
+    """Knobs for the analog non-ideality models (paper Section IV defaults).
+
+    All fields are static Python scalars: the config is hashed into
+    `plan_signature`, so any field combination is a distinct compile/packing
+    key and new fields flow into the packed-serving stackability rule
+    automatically.
+
+    Wire model dispatch: "first_order" is the O(n^2) perturbation used on
+    the hot path; "nodal" routes readout through the exact batched MNA
+    solver in `repro.physics.nodal` (block-tridiagonal, jit/vmap-safe);
+    "none" disables the wire model even when r_wire > 0.
+
+    Device dynamics (physics subsystem):
+      * drift_t / drift_nu: power-law retention drift G(t) = G (t/t0)^-nu
+        with t0 = 1 s, applied at readout time (`readout_conductance`).
+      * p_stuck_on / p_stuck_off: per-device stuck-at fault rates applied at
+        programming time; stuck cells read g_stuck_{on,off} * G0 regardless
+        of target.  `remap_faults` enables target-aware row/column remapping
+        (repro.physics.faults) that steers faults onto low-impact entries.
+      * compensate_model: which wire model write-verify tracks
+        (None = same as `wire_model`); `wv_iters` is the fixed-point depth.
+    """
     sigma: float = 0.0        # conductance sigma in units of G0 (paper: 0.05)
     r_wire: float = 0.0       # wire segment resistance in ohms (paper: 1.0)
-    wire_model: str = "first_order"   # "first_order" | "none"
+    wire_model: str = "first_order"   # "first_order" | "nodal" | "none"
     compensate_wire: bool = False     # write-verify IR-drop compensation
     # (paper ref [29] mitigation; applied at programming time in map_matrix)
+    compensate_model: Optional[str] = None  # None -> wire_model
+    wv_iters: int = 3                 # write-verify fixed-point iterations
+    drift_t: float = 0.0              # readout time since programming [s]
+    drift_nu: float = 0.0             # power-law drift exponent (0 = off)
+    p_stuck_on: float = 0.0           # fraction of devices stuck at G_on
+    p_stuck_off: float = 0.0          # fraction of devices stuck at G_off
+    g_stuck_on: float = 1.0           # stuck-ON conductance, units of G0
+    g_stuck_off: float = 0.0          # stuck-OFF conductance, units of G0
+    remap_faults: bool = False        # fault-aware row/column remapping
 
     VARIATION_PAPER = 0.05
     R_WIRE_PAPER = 1.0
@@ -226,3 +260,92 @@ class NonidealConfig:
 IDEAL = NonidealConfig()
 PAPER_VARIATION = NonidealConfig(sigma=0.05)
 PAPER_FULL = NonidealConfig(sigma=0.05, r_wire=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Shared programming / readout pipeline
+# ---------------------------------------------------------------------------
+#
+# Everything the config can express funnels through exactly two functions:
+#
+#   program_conductances : target -> device state   (write-verify, write
+#                          noise, stuck-at faults; programming time)
+#   readout_conductance + wire_readout : device state -> matrix the circuit
+#                          computes with (drift, then the wire model;
+#                          readout time, called from {CrossbarPair,
+#                          TileGrid}.a_eff)
+#
+# so all four executors (recursive / flat / finalized / fused-arena) and the
+# packed-serving layer see identical physics without any changes of their
+# own.  The physics subsystem (repro.physics) is imported lazily so the core
+# package has no hard dependency on it at import time.
+
+def _over_tiles(fn, g: jnp.ndarray) -> jnp.ndarray:
+    """Apply a 2-D (r, c) -> (r, c) map over arbitrary leading batch axes."""
+    lead = g.shape[:-2]
+    if not lead:
+        return fn(g)
+    flat = g.reshape((-1,) + g.shape[-2:])
+    return jax.vmap(fn)(flat).reshape(g.shape)
+
+
+def program_conductances(g_target: jnp.ndarray, key: jax.Array,
+                         ni: NonidealConfig, g0: float) -> jnp.ndarray:
+    """The one programming pipeline: write-verify -> write noise -> faults.
+
+    `g_target` is a (..., r, c) stack of target conductances (one physical
+    array per trailing 2-D slice; leading axes are tile/batch axes).
+    Deterministic write-verify pre-distortion happens against the configured
+    wire model; Gaussian write noise and stuck-at faults are drawn from
+    `key` independently per device.
+    """
+    g = g_target
+    if ni.compensate_wire and ni.r_wire > 0.0:
+        model = ni.compensate_model or ni.wire_model
+        if model == "first_order":
+            g = _over_tiles(
+                partial(compensate_conductances, r_seg=ni.r_wire,
+                        iters=ni.wv_iters), g)
+        elif model == "nodal":
+            from repro.physics import dynamics as _dyn
+            g = _over_tiles(
+                partial(_dyn.write_verify, r_seg=ni.r_wire, model="nodal",
+                        iters=ni.wv_iters), g)
+        elif model != "none":
+            raise ValueError(f"unknown compensate_model: {model!r}")
+    # Key discipline: with faults off, variation consumes `key` directly so
+    # seeded noise realizations are bit-identical to the pre-physics pipeline.
+    has_faults = ni.p_stuck_on > 0.0 or ni.p_stuck_off > 0.0
+    k_var, k_fault = jax.random.split(key) if has_faults else (key, key)
+    g = apply_variation(g, k_var, ni.sigma * g0)
+    if has_faults:
+        from repro.physics import faults as _faults
+        g = _faults.apply_stuck_faults(
+            g, g_target, k_fault, p_on=ni.p_stuck_on, p_off=ni.p_stuck_off,
+            g_on=ni.g_stuck_on * g0, g_off=ni.g_stuck_off * g0,
+            remap=ni.remap_faults)
+    return g
+
+
+def readout_conductance(g: jnp.ndarray, ni: NonidealConfig) -> jnp.ndarray:
+    """Device state at readout time: power-law retention drift.
+
+    G(t) = G(t0) * (t/t0)^-nu with t0 = 1 s; `drift_t`/`drift_nu` are static
+    config floats, so the no-drift case costs nothing at trace time.
+    """
+    if ni.drift_nu == 0.0 or ni.drift_t <= 0.0 or ni.drift_t == 1.0:
+        return g
+    return g * (ni.drift_t ** (-ni.drift_nu))
+
+
+def wire_readout(g: jnp.ndarray, ni: NonidealConfig) -> jnp.ndarray:
+    """Dispatch the configured wire model over a (..., r, c) stack."""
+    if ni.r_wire <= 0.0 or ni.wire_model == "none":
+        return g
+    if ni.wire_model == "first_order":
+        return _over_tiles(partial(effective_conductance, r_seg=ni.r_wire), g)
+    if ni.wire_model == "nodal":
+        from repro.physics import nodal as _nodal
+        return _over_tiles(
+            partial(_nodal.nodal_effective_conductance, r_seg=ni.r_wire), g)
+    raise ValueError(f"unknown wire_model: {ni.wire_model!r}")

@@ -4,6 +4,7 @@
   arena_mvm    - arena-executor level megakernel (stacked tiles over one
                  register arena; signs/divisors folded, DAC/ADC fused)
   schur_gemm   - fused Schur-complement update A4 - A3 @ W
+  banded_solve - batched block-tridiagonal sweeps for the nodal wire oracle
 
 Use repro.kernels.ops for the public (padded, jit'd) entry points and
 repro.kernels.ref for the pure-jnp oracles.

@@ -1,0 +1,92 @@
+"""Pallas kernel: batched block-tridiagonal solve sweeps for the nodal oracle.
+
+The physics-grade crossbar solve (`physics/nodal.py`) reduces each crossbar
+to a block-tridiagonal SPD system - nr blocks of size s with constant
+off-diagonal blocks -gw*I - factored once into an explicit-inverse stack
+Minv (nr, s, s).  The remaining work, and the Monte-Carlo hot loop, is the
+pair of block-Thomas sweeps
+
+    forward:   z_i = Minv_i (rhs_i + gw * z_{i-1}),     z_{-1} = 0
+    backward:  x_i = z_i + gw * Minv_i x_{i+1},         x_{nr} = 0
+
+i.e. 2*nr dense (s x s) @ (s x k) matmuls per crossbar with a sequential
+carry.  This kernel runs them for a whole batch in one pallas_call: the
+grid walks the batch axis (one crossbar per grid step, its Minv stack and
+rhs streamed HBM->VMEM once), and the two `lax.scan`s run inside the kernel
+body on the MXU.
+
+Hybrid factor/solve split (deliberate, documented): the *factorization*
+(the Minv recursion) stays in XLA - it is irreducibly sequential in i and
+batched `linalg.inv` is already optimal there - so the kernel is pure
+matmul sweeps over precomputed factors.  That is also what makes the
+zero-padding contract trivial: padded rows/columns of Minv and rhs are
+zero, zeros propagate zeros through both scans, and `ops.py` slices the
+result back.
+
+TPU alignment: ops.py pads s and k to the 128 lane width.  On CPU the
+kernel executes with interpret=True; interpret-mode parity against
+`ref.block_tridiag_solve_ref` and the in-line jnp scans of nodal.py is the
+tested contract (tests/test_physics_oracle.py), matching every other
+kernel in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_tridiag_kernel(minv_ref, rhs_ref, out_ref, *, gw: float):
+    minv = minv_ref[0]                      # (nr, s, s)
+    rhs = rhs_ref[0]                        # (nr, s, k)
+    dims = (((1,), (0,)), ((), ()))         # (s,s) @ (s,k)
+    z0 = jnp.zeros(rhs.shape[1:], rhs.dtype)
+
+    def fwd(z, x):
+        mi, ri = x
+        zn = jax.lax.dot_general(mi, ri + gw * z, dims,
+                                 preferred_element_type=rhs.dtype)
+        return zn, zn
+
+    _, zs = jax.lax.scan(fwd, z0, (minv, rhs))
+
+    def bwd(xn, x):
+        mi, zi = x
+        xi = zi + gw * jax.lax.dot_general(mi, xn, dims,
+                                           preferred_element_type=rhs.dtype)
+        return xi, xi
+
+    _, xs = jax.lax.scan(bwd, z0, (minv[::-1], zs[::-1]))
+    out_ref[0] = xs[::-1]
+
+
+def block_tridiag_solve(minv: jnp.ndarray, rhs: jnp.ndarray, *, gw: float,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Batched block-Thomas sweeps over precomputed inverse factors.
+
+    Args:
+      minv: (B, nr, s, s) per-crossbar explicit-inverse factor stacks.
+      rhs:  (B, nr, s, k) right-hand-side blocks.
+      gw:   wire segment conductance 1/r_seg (static Python float - it is
+            baked into the kernel like g0 in crossbar_mvm).
+    Returns:
+      (B, nr, s, k) solution blocks.  s and k must be 128-aligned on TPU
+      (ops.py pads); zero padding is exact (zeros propagate zeros).
+    """
+    b, nr, s, s2 = minv.shape
+    b2, nr2, s3, k = rhs.shape
+    assert (b, nr, s) == (b2, nr2, s3) and s == s2, (minv.shape, rhs.shape)
+    kernel = functools.partial(_block_tridiag_kernel, gw=gw)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nr, s, s), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nr, s, k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nr, s, k), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nr, s, k), rhs.dtype),
+        interpret=interpret,
+    )(minv, rhs)

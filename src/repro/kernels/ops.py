@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import arena_mvm as _arena
+from repro.kernels import banded_solve as _banded
 from repro.kernels import crossbar_mvm as _xbar
 from repro.kernels import schur_gemm as _schur
 
@@ -127,6 +128,27 @@ def arena_packed_apply(arena, ops, in_offs, in_signs, out_offs, out_init, *,
         dac_bits=dac_bits, adc_bits=adc_bits, fullscale=fullscale,
         interpret=interpret)
     return out[:, :, :k].astype(arena.dtype)
+
+
+@partial(jax.jit, static_argnames=("gw", "interpret"))
+def block_tridiag_solve(minv, rhs, *, gw: float,
+                        interpret: bool | None = None):
+    """Batched block-Thomas sweeps; see kernels/banded_solve.py.
+
+    minv: (B, nr, s, s), rhs: (B, nr, s, k) -> (B, nr, s, k).  The block
+    size s and RHS width k pad to 128 and slice back; zero padding is exact
+    for this kernel (zeros propagate zeros through both sweeps), so callers
+    never see the alignment constraint.  Keeps the input dtype (the nodal
+    oracle runs it under x64 for parity tests; interpret mode handles f64).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, nr, s, k = rhs.shape
+    blk = 128
+    mp = _pad_to(minv, (1, 1, blk, blk))
+    rp = _pad_to(rhs, (1, 1, blk, blk))
+    out = _banded.block_tridiag_solve(mp, rp, gw=gw, interpret=interpret)
+    return out[:, :, :s, :k]
 
 
 @partial(jax.jit, static_argnames=("interpret",))

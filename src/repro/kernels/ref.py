@@ -51,6 +51,26 @@ def arena_packed_ref(arena, ops, in_offs, in_signs, out_offs, out_init, *,
         for i in range(arena.shape[0])])
 
 
+def block_tridiag_solve_ref(minv, rhs, *, gw):
+    """Oracle for the batched block-Thomas sweeps (kernels/banded_solve.py).
+
+    Python loop over the block row axis; batch axis vectorized.
+    minv: (B, nr, s, s), rhs: (B, nr, s, k) -> (B, nr, s, k).
+    """
+    b, nr, s, k = rhs.shape
+    z = jnp.zeros((b, s, k), rhs.dtype)
+    zs = []
+    for i in range(nr):
+        z = jnp.einsum("bij,bjk->bik", minv[:, i], rhs[:, i] + gw * z)
+        zs.append(z)
+    x = jnp.zeros_like(z)
+    xs = [None] * nr
+    for i in reversed(range(nr)):
+        x = zs[i] + gw * jnp.einsum("bij,bjk->bik", minv[:, i], x)
+        xs[i] = x
+    return jnp.stack(xs, axis=1)
+
+
 def schur_update_ref(a4, a3, w):
     """A4 - A3 @ W in f32."""
     return a4.astype(jnp.float32) - a3.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,27 @@
+"""Physics-grade crossbar models: nodal wire oracle + device dynamics.
+
+`nodal`    - batched block-tridiagonal MNA solve (the exact wire oracle)
+`dynamics` - retention drift and write-verify programming loops
+`faults`   - stuck-at injection with fault-aware row/column remapping
+
+Everything integrates through `NonidealConfig` and the shared
+programming/readout pipeline in `core/nonideal.py`, so the four BlockAMC
+executors and the packed-serving layer consume these models unchanged.
+"""
+from repro.physics.dynamics import drift_conductance, write_verify
+from repro.physics.faults import (apply_stuck_faults,
+                                  fault_aware_permutations,
+                                  sample_stuck_masks)
+from repro.physics.nodal import (nodal_effective_conductance,
+                                 nodal_effective_conductance_batched,
+                                 nodal_inv_batched, nodal_inv_outputs,
+                                 nodal_mvm_batched, nodal_mvm_currents,
+                                 row_schur_blocks)
+
+__all__ = [
+    "drift_conductance", "write_verify",
+    "apply_stuck_faults", "fault_aware_permutations", "sample_stuck_masks",
+    "nodal_effective_conductance", "nodal_effective_conductance_batched",
+    "nodal_inv_batched", "nodal_inv_outputs",
+    "nodal_mvm_batched", "nodal_mvm_currents", "row_schur_blocks",
+]

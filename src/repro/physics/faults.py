@@ -1,0 +1,117 @@
+"""Stuck-at device faults with fault-aware row/column remapping.
+
+RRAM arrays ship with a fraction of devices stuck at G_on (shorted
+filament) or G_off (broken filament / unformed cell), immune to
+programming.  Two knobs in `NonidealConfig` inject them at programming
+time (`nonideal.program_conductances`); the mitigation modelled here is
+the standard one for in-memory computing: the row/column *peripheral
+routing* is programmable, so the mapper can choose which logical matrix
+row lands on which physical array row and steer faults onto entries that
+tolerate them.
+
+Simulation trick - logical space only: a physical fault at (i, j) under
+row/column permutations p, q lands on logical entry (p[i], q[j]).  So
+instead of permuting the programmed matrix and teaching every executor
+about permuted peripherals, we permute the *fault masks* into logical
+space and stamp them onto the unpermuted target.  Executors, plans and
+the packed-serving layer are untouched.
+
+Remap objective: minimize the per-fault squared target mismatch
+
+    sum over faults  (g_target[logical] - g_stuck)^2,
+
+NOT an aggregate row-energy sort.  The distinction matters for the INV
+circuit: ranking rows by total energy steers every fault onto the
+globally weakest rows, which minimizes Frobenius error by *concentrating*
+the perturbation - and a perturbation concentrated on a few rows is what
+pushes an inverted matrix toward singularity.  Per-entry matching instead
+exploits the differential mapping directly: every signed entry leaves an
+exact zero in one of the two arrays, so most stuck-OFF faults can be
+routed onto zero-target entries where they cost nothing, scattered across
+the array.  The assignment is a greedy jit-safe matching (one lax.scan of
+masked argmins per axis): physical rows in decreasing fault burden pick
+the cheapest remaining logical row, then the same for columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_stuck_masks(key: jax.Array, shape, p_on: float, p_off: float):
+    """Disjoint boolean masks of stuck-ON / stuck-OFF devices (p_on+p_off<=1)."""
+    u = jax.random.uniform(key, shape)
+    return u < p_on, u >= 1.0 - p_off
+
+
+def _greedy_assign(cost: jnp.ndarray, burden: jnp.ndarray) -> jnp.ndarray:
+    """Greedy min-cost matching: physical slot i (in decreasing `burden`
+    order) takes the cheapest still-available logical slot.  Returns p with
+    p[i] = logical index hosted by physical i.  Pure scan - jit/vmap-safe."""
+    order = jnp.argsort(-burden)
+
+    def step(avail, ci):
+        a = jnp.argmin(jnp.where(avail, ci, jnp.inf))
+        return avail.at[a].set(False), a
+
+    _, assigned = jax.lax.scan(
+        step, jnp.ones(cost.shape[1], bool), cost[order])
+    return jnp.zeros(cost.shape[0], dtype=assigned.dtype).at[order].set(
+        assigned)
+
+
+def fault_aware_permutations(g_target: jnp.ndarray, on: jnp.ndarray,
+                             off: jnp.ndarray, g_on: float, g_off: float):
+    """Fault-aware row then column assignment; returns (p, q) with the
+    convention that physical row i hosts logical row p[i] (ditto q for
+    columns).  Cost of hosting logical entry (a, b) on a faulty device is
+    (g_target[a, b] - g_stuck)^2."""
+    fon = on.astype(g_target.dtype)
+    foff = off.astype(g_target.dtype)
+    con = (g_target - g_on) ** 2           # cost tables per logical entry
+    coff = (g_target - g_off) ** 2
+    # rows: cost[i, a] = sum_j on[i,j] con[a,j] + off[i,j] coff[a,j]
+    cost_r = fon @ con.T + foff @ coff.T
+    p = _greedy_assign(cost_r, jnp.sum(fon + foff, axis=1))
+    inv_p = jnp.argsort(p)
+    on_r, off_r = fon[inv_p], foff[inv_p]  # row-remapped logical masks
+    # columns on top of the row assignment:
+    # cost[j, b] = sum_a on_r[a,j] con[a,b] + off_r[a,j] coff[a,b]
+    cost_c = on_r.T @ con + off_r.T @ coff
+    q = _greedy_assign(cost_c, jnp.sum(on_r + off_r, axis=0))
+    return p, q
+
+
+def _apply_stuck_2d(g: jnp.ndarray, g_target: jnp.ndarray, key: jax.Array,
+                    p_on: float, p_off: float, g_on: float, g_off: float,
+                    remap: bool) -> jnp.ndarray:
+    on, off = sample_stuck_masks(key, g.shape, p_on, p_off)
+    if remap:
+        p, q = fault_aware_permutations(g_target, on, off, g_on, g_off)
+        # logical mask: entry (a, b) is faulty iff physical (p^-1 a, q^-1 b) is
+        inv_p, inv_q = jnp.argsort(p), jnp.argsort(q)
+        on = on[inv_p][:, inv_q]
+        off = off[inv_p][:, inv_q]
+    return jnp.where(on, g_on, jnp.where(off, g_off, g))
+
+
+def apply_stuck_faults(g: jnp.ndarray, g_target: jnp.ndarray,
+                       key: jax.Array, *, p_on: float, p_off: float,
+                       g_on: float, g_off: float,
+                       remap: bool = False) -> jnp.ndarray:
+    """Stamp stuck-at faults onto a programmed (..., r, c) conductance stack.
+
+    `g` is the post-write-noise state, `g_target` the noiseless targets the
+    remapper matches against (the mapper knows its targets, not the noise).
+    Faults are drawn independently per trailing 2-D array from `key`.
+    """
+    lead = g.shape[:-2]
+    if not lead:
+        return _apply_stuck_2d(g, g_target, key, p_on, p_off, g_on, g_off,
+                               remap)
+    flat_g = g.reshape((-1,) + g.shape[-2:])
+    flat_t = g_target.reshape((-1,) + g.shape[-2:])
+    keys = jax.random.split(key, flat_g.shape[0])
+    out = jax.vmap(lambda gi, ti, ki: _apply_stuck_2d(
+        gi, ti, ki, p_on, p_off, g_on, g_off, remap))(flat_g, flat_t, keys)
+    return out.reshape(g.shape)

@@ -1,0 +1,373 @@
+"""Batched nodal (MNA) crossbar solver: the physics-grade wire oracle.
+
+DESIGN NOTE - structured solve of the wordline/bitline Laplacian
+----------------------------------------------------------------
+
+The exact crossbar circuit of `core/nonideal.py` (`_crossbar_laplacian`) is
+a 2*nr*nc-node resistive network: bitline nodes b(i,j) coupled vertically by
+wire segments (conductance gw = 1/r_seg), wordline nodes w(i,j) coupled
+horizontally, and the RRAM cell g[i,j] bridging b(i,j) <-> w(i,j).  The
+dense-numpy oracle solves the full [A, B; C, D] Laplacian at O((2 nr nc)^3)
+- fine as HSPICE's stand-in at n <= 32, hopeless for Monte-Carlo batches.
+
+This module reformulates the same system (same geometry, same answer) so a
+whole batch of crossbars is one XLA dispatch:
+
+1. **Residual unknowns.**  We solve for the deviation from the ideal-wire
+   operating point, b(i,j) = v_in[j] + beta(i,j) and w(i,j) = omega(i,j)
+   (ideal limit: beta = omega = 0).  The Laplacian is unchanged; the right
+   hand side becomes O(g) instead of O(gw).  This is what makes float32
+   batches usable: the solution *is* the IR-drop effect (~r*G*n relative),
+   instead of an O(1) voltage from which the effect would be recovered by
+   catastrophic cancellation against gw ~ 1e4 * g.
+
+2. **Wordline elimination.**  Within row i the wordline nodes couple only to
+   each other (tridiagonally, via WL segments) and to their own bitline
+   nodes (via the cell).  Eliminating them analytically,
+
+       W_i omega_i = g_i * (v_in + beta_i),
+       W_i = tridiag(-gw, wd_i, -gw),
+       wd_i[j] = g[i,j] + gw*((j>0) + (j<nc-1) + (j==nc-1)),
+
+   (last term: the sense segment to the TIA virtual ground) leaves a
+   block-tridiagonal system in beta alone - nr blocks of size nc with
+   *constant* off-diagonal blocks -gw*I:
+
+       -gw beta_{i-1} + S_i beta_i - gw beta_{i+1} = rhs_i,
+       S_i = diag(db_i) - diag(g_i) W_i^{-1} diag(g_i),
+       db_i[j] = g[i,j] + gw*((i>0) + (i<nr-1) + (i==0)),
+       rhs_i = g_i * (W_i^{-1}(g_i * v_in) - v_in).
+
+   (db's last term: the driver segment feeding b(0,j).)  Each W_i solve is a
+   vectorized Thomas scan; S_i is SPD.
+
+3. **Block-Thomas factor + sweeps.**  One `lax.scan` over rows factors the
+   block-tridiagonal system, carrying the explicit inverse
+
+       M_0 = S_0,   M_i = S_i - gw^2 M_{i-1}^{-1},   Minv_i = M_i^{-1}
+
+   (S_i assembled on the fly inside the scan so only the Minv stack - the
+   part the solve sweeps need - is ever materialized).  The forward/backward
+   sweeps are then pure (nc x nc) matmuls,
+
+       z_i = Minv_i (rhs_i + gw z_{i-1}),      x_i = z_i + gw Minv_i x_{i+1},
+
+   which is exactly the shape the Pallas kernel in
+   `kernels/banded_solve.py` runs for a whole Monte-Carlo batch in one
+   pallas_call (`use_kernel=True`).  Factorization stays in XLA: the
+   recursion is irreducibly sequential and batched `linalg.inv` is already
+   optimal there.
+
+4. **Outputs.**  Sense currents I_i = gw * omega_i[nc-1]; the exact
+   effective conductance H = sense^T L^{-1} drive falls out of an identity
+   drive (`nodal_effective_conductance` - the exact counterpart of the
+   first-order `nonideal.effective_conductance`, which is what the
+   differential validation suite compares).  The INV feedback circuit
+   reduces algebraically to u = -g0 H^{-1} v_in: block-eliminating the
+   internal nodes from the augmented MNA system of `mna_inv_outputs` leaves
+   precisely the constraint sense^T L^{-1} drive u = -g0 v_in.
+
+Everything here is pure jnp with static shapes: jit-, vmap- and scan-safe.
+`r_seg` must be a static Python float (it selects the assembled circuit, as
+in the rest of the repo).  Cost per crossbar: nr dense (nc x nc) inverses,
+i.e. O(nr nc^3) ~ n^4 instead of the dense oracle's n^6.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Structured assembly
+# ---------------------------------------------------------------------------
+
+def _wl_diag(g: jnp.ndarray, gw: float) -> jnp.ndarray:
+    """Diagonal of the per-row wordline tridiagonal W_i; (nr, nc)."""
+    nr, nc = g.shape
+    j = jnp.arange(nc)
+    seg = (j > 0).astype(g.dtype) + (j < nc - 1).astype(g.dtype) \
+        + (j == nc - 1).astype(g.dtype)          # sense segment
+    return g + gw * seg[None, :]
+
+
+def _bl_diag(g: jnp.ndarray, gw: float) -> jnp.ndarray:
+    """Diagonal entries db_i of the bitline blocks; (nr, nc)."""
+    nr, nc = g.shape
+    i = jnp.arange(nr)
+    seg = (i > 0).astype(g.dtype) + (i < nr - 1).astype(g.dtype) \
+        + (i == 0).astype(g.dtype)               # driver segment
+    return g + gw * seg[:, None]
+
+
+def _thomas_solve(d: jnp.ndarray, gw: float, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Solve tridiag(-gw, d, -gw) x = rhs with a vectorized Thomas scan.
+
+    d: (..., m) diagonals; rhs: (..., m, k).  Scans over m; everything else
+    is batch.  jit/vmap-safe (no data-dependent control flow).
+    """
+    d_m = jnp.moveaxis(d, -1, 0)                 # (m, ...)
+    r_m = jnp.moveaxis(rhs, -2, 0)               # (m, ..., k)
+    cp0 = jnp.zeros_like(d_m[0])
+    dp0 = jnp.zeros_like(r_m[0])
+
+    def fwd(carry, x):
+        cp, dp = carry
+        dj, rj = x
+        denom = dj + gw * cp                     # b_j - a * cp_{j-1}, a = -gw
+        cp_new = -gw / denom
+        dp_new = (rj + gw * dp) / denom[..., None]
+        return (cp_new, dp_new), (cp_new, dp_new)
+
+    _, (cps, dps) = jax.lax.scan(fwd, (cp0, dp0), (d_m, r_m))
+
+    def bwd(x_next, x):
+        cpj, dpj = x
+        xj = dpj - cpj[..., None] * x_next
+        return xj, xj
+
+    _, xs = jax.lax.scan(bwd, jnp.zeros_like(dp0), (cps[::-1], dps[::-1]))
+    return jnp.moveaxis(xs[::-1], 0, -2)
+
+
+def row_schur_blocks(g: jnp.ndarray, r_seg: float) -> jnp.ndarray:
+    """The nr dense (nc x nc) diagonal blocks S_i after WL elimination.
+
+    Exposed for property tests: each S_i is symmetric positive definite and
+    the full block-tridiagonal operator (off-blocks -gw I) is SPD.
+    """
+    g = jnp.asarray(g)
+    gw = 1.0 / r_seg
+    wd = _wl_diag(g, gw)
+    db = _bl_diag(g, gw)
+
+    def one(g_i, wd_i, db_i):
+        x = _thomas_solve(wd_i, gw, jnp.diag(g_i))     # W_i^{-1} diag(g_i)
+        return jnp.diag(db_i) - g_i[:, None] * x
+
+    return jax.vmap(one)(g, wd, db)
+
+
+# ---------------------------------------------------------------------------
+# Block-Thomas factor + solve sweeps
+# ---------------------------------------------------------------------------
+
+def _factor(g: jnp.ndarray, gw: float) -> jnp.ndarray:
+    """Scan over rows: assemble S_i on the fly, carry M_i^{-1}; (nr, nc, nc)."""
+    nr, nc = g.shape
+    wd = _wl_diag(g, gw)
+    db = _bl_diag(g, gw)
+
+    def step(minv_prev, row):
+        g_i, wd_i, db_i = row
+        x = _thomas_solve(wd_i, gw, jnp.diag(g_i))
+        s_i = jnp.diag(db_i) - g_i[:, None] * x
+        m_i = s_i - (gw * gw) * minv_prev
+        minv = jnp.linalg.inv(m_i)
+        return minv, minv
+
+    init = jnp.zeros((nc, nc), g.dtype)
+    _, minvs = jax.lax.scan(step, init, (g, wd, db))
+    return minvs
+
+
+def _sweeps_jnp(minvs: jnp.ndarray, rhs: jnp.ndarray, gw: float) -> jnp.ndarray:
+    """Forward/backward block-Thomas sweeps; same math as the Pallas kernel."""
+    z0 = jnp.zeros(rhs.shape[1:], rhs.dtype)
+
+    def fwd(z, x):
+        mi, ri = x
+        zn = mi @ (ri + gw * z)
+        return zn, zn
+
+    _, zs = jax.lax.scan(fwd, z0, (minvs, rhs))
+
+    def bwd(xn, x):
+        mi, zi = x
+        xi = zi + gw * (mi @ xn)
+        return xi, xi
+
+    _, xs = jax.lax.scan(bwd, z0, (minvs[::-1], zs[::-1]))
+    return xs[::-1]
+
+
+def _sweeps(minvs: jnp.ndarray, rhs: jnp.ndarray, gw: float,
+            use_kernel: bool) -> jnp.ndarray:
+    """Batched sweep dispatch: (B, nr, nc, nc) x (B, nr, nc, k)."""
+    if use_kernel:
+        from repro.kernels import ops as _ops
+        return _ops.block_tridiag_solve(minvs, rhs, gw=gw)
+    return jax.vmap(lambda m, r: _sweeps_jnp(m, r, gw))(minvs, rhs)
+
+
+# ---------------------------------------------------------------------------
+# Single-crossbar MVM pipeline (2-D; batch via vmap around the stages)
+# ---------------------------------------------------------------------------
+
+def _mvm_prepare(g: jnp.ndarray, v: jnp.ndarray, gw: float):
+    """Per-instance stage A: WL diagonals, residual rhs, Minv factor stack."""
+    wd = _wl_diag(g, gw)
+    gv = g[:, :, None] * v[None, :, :]                 # (nr, nc, k)
+    y = _thomas_solve(wd, gw, gv)                      # W_i^{-1}(g_i * v)
+    rhs = g[:, :, None] * (y - v[None, :, :])
+    minvs = _factor(g, gw)
+    return minvs, rhs, wd
+
+
+def _mvm_recover(g: jnp.ndarray, v: jnp.ndarray, wd: jnp.ndarray,
+                 beta: jnp.ndarray, gw: float) -> jnp.ndarray:
+    """Per-instance stage C: WL voltages from beta, then sense currents."""
+    omega = _thomas_solve(wd, gw, g[:, :, None] * (v[None, :, :] + beta))
+    return gw * omega[:, -1, :]                        # (nr, k)
+
+
+def _mvm_batched(g: jnp.ndarray, v: jnp.ndarray, gw: float,
+                 use_kernel: bool) -> jnp.ndarray:
+    """(B, nr, nc) x (B, nc, k) -> (B, nr, k) sense currents."""
+    minvs, rhs, wd = jax.vmap(lambda gi, vi: _mvm_prepare(gi, vi, gw))(g, v)
+    beta = _sweeps(minvs, rhs, gw, use_kernel)
+    return jax.vmap(lambda gi, vi, wdi, bi:
+                    _mvm_recover(gi, vi, wdi, bi, gw))(g, v, wd, beta)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def nodal_mvm_currents(g, v_in, r_seg: float, *,
+                       use_kernel: bool = False) -> jnp.ndarray:
+    """Exact sense currents of the MVM crossbar (batched-JAX nodal solve).
+
+    Drop-in jnp counterpart of `nonideal.mna_mvm_currents` (same geometry,
+    pinned to it at rtol 1e-6 in tests/test_physics_oracle.py).  `v_in` may
+    be (nc,) or (nc, k); `r_seg` is a static Python float.  Ideal limit
+    r_seg == 0 short-circuits to g @ v_in at trace time.
+    """
+    g = jnp.asarray(g)
+    v = jnp.asarray(v_in)
+    if r_seg == 0.0:
+        return g @ v
+    vec = v.ndim == 1
+    v2 = v[:, None] if vec else v
+    out = _mvm_batched(g[None], v2[None].astype(g.dtype),
+                       1.0 / float(r_seg), use_kernel)[0]
+    return out[:, 0] if vec else out
+
+
+def nodal_effective_conductance(g, r_seg: float, *,
+                                use_kernel: bool = False) -> jnp.ndarray:
+    """Exact effective conductance H = sense^T L^{-1} drive of the wired
+    crossbar (identity drive through the MVM solve).
+
+    The physics-grade counterpart of `nonideal.effective_conductance`:
+    H @ v equals the exact sense currents for any drive v, so the circuit
+    "computes with" H exactly - this is the matrix the differential
+    validation suite pins the first-order model against.
+    """
+    g = jnp.asarray(g)
+    if r_seg == 0.0:
+        return g
+    eye = jnp.eye(g.shape[1], dtype=g.dtype)
+    return nodal_mvm_currents(g, eye, r_seg, use_kernel=use_kernel)
+
+
+def nodal_inv_outputs(g, v_in, r_seg: float, g0: float, *,
+                      use_kernel: bool = False) -> jnp.ndarray:
+    """Exact OPA outputs of the INV feedback circuit with wire resistance.
+
+    Counterpart of `nonideal.mna_inv_outputs`: block elimination of the
+    internal nodes from the augmented system leaves H u = -g0 v_in with
+    H the exact effective conductance, so u = -g0 H^{-1} v_in.
+    """
+    g = jnp.asarray(g)
+    nr, nc = g.shape
+    assert nr == nc, "INV circuit requires a square array"
+    v = jnp.asarray(v_in)
+    if r_seg == 0.0:
+        return -g0 * jnp.linalg.solve(g, v)
+    h = nodal_effective_conductance(g, r_seg, use_kernel=use_kernel)
+    return -g0 * jnp.linalg.solve(h, v.astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo batches: one dispatch over a stack of crossbars
+# ---------------------------------------------------------------------------
+
+def _broadcast_drive(g: jnp.ndarray, v_in) -> tuple[jnp.ndarray, bool]:
+    """Normalize v_in to (B, nc, k) against a (B, nr, nc) stack."""
+    b, nr, nc = g.shape
+    v = jnp.asarray(v_in, dtype=g.dtype)
+    vec = False
+    if v.ndim == 1:                       # (nc,) shared vector
+        vec = True
+        v = jnp.broadcast_to(v[None, :, None], (b, nc, 1))
+    elif v.ndim == 2:
+        if v.shape == (b, nc) and b != nc:   # per-instance vector
+            vec = True
+            v = v[:, :, None]
+        else:                             # (nc, k) shared multi-drive
+            # NB: when B == nc a (B, nc) array is read as a shared
+            # multi-drive; pass (B, nc, 1) to force per-instance vectors.
+            v = jnp.broadcast_to(v[None], (b,) + v.shape)
+    return v, vec
+
+
+def nodal_mvm_batched(g, v_in, r_seg: float, *, chunk: int | None = None,
+                      use_kernel: bool = False) -> jnp.ndarray:
+    """Sense currents for a whole crossbar batch in one dispatch.
+
+    g: (B, nr, nc) conductance stack; v_in: (nc,), (B, nc), (nc, k) or
+    (B, nc, k).  `chunk` bounds peak memory (the Minv factor stack is
+    (chunk, nr, nc, nc)) by running the batch through `lax.map` in chunks
+    *inside* the same jitted computation - still a single dispatch.
+    At (B, n) = (64, 256) use chunk ~ 4: ~1 GB transient instead of ~17 GB.
+    """
+    g = jnp.asarray(g)
+    v, vec = _broadcast_drive(g, v_in)
+    if r_seg == 0.0:
+        out = jnp.einsum("brc,bck->brk", g, v)
+        return out[..., 0] if vec else out
+    gw = 1.0 / float(r_seg)
+    b = g.shape[0]
+    if chunk is None or chunk >= b:
+        out = _mvm_batched(g, v, gw, use_kernel)
+        return out[..., 0] if vec else out
+    pad = (-b) % chunk
+    if pad:
+        # zero-conductance padding: the wire network alone stays nonsingular
+        # (grounded through the driver and sense segments)
+        g = jnp.concatenate([g, jnp.zeros((pad,) + g.shape[1:], g.dtype)])
+        v = jnp.concatenate([v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+    gc = g.reshape((-1, chunk) + g.shape[1:])
+    vc = v.reshape((-1, chunk) + v.shape[1:])
+    out = jax.lax.map(lambda xs: _mvm_batched(xs[0], xs[1], gw, use_kernel),
+                      (gc, vc))
+    out = out.reshape((-1,) + out.shape[2:])[:b]
+    return out[..., 0] if vec else out
+
+
+def nodal_effective_conductance_batched(g, r_seg: float, *,
+                                        chunk: int | None = None,
+                                        use_kernel: bool = False
+                                        ) -> jnp.ndarray:
+    """Exact H for a (B, nr, nc) stack of crossbars; (B, nr, nc) out."""
+    g = jnp.asarray(g)
+    if r_seg == 0.0:
+        return g
+    eye = jnp.eye(g.shape[2], dtype=g.dtype)
+    return nodal_mvm_batched(g, eye, r_seg, chunk=chunk,
+                             use_kernel=use_kernel)
+
+
+def nodal_inv_batched(g, v_in, r_seg: float, g0: float, *,
+                      chunk: int | None = None,
+                      use_kernel: bool = False) -> jnp.ndarray:
+    """INV outputs for a (B, n, n) stack: u = -g0 H^{-1} v per instance."""
+    g = jnp.asarray(g)
+    h = nodal_effective_conductance_batched(g, r_seg, chunk=chunk,
+                                            use_kernel=use_kernel)
+    v, vec = _broadcast_drive(g, v_in)
+    out = -g0 * jnp.linalg.solve(h, v)
+    return out[..., 0] if vec else out

@@ -28,19 +28,8 @@ def test_compensation_recovers_target(n):
     assert comp_dev < 0.05 * uncomp_dev
 
 
-def test_compensation_against_exact_mna():
-    """Compensated programming cancels the wire error in the exact circuit."""
-    n = 16
-    a = jnp.abs(wishart(jax.random.PRNGKey(1), n))
-    g = a / jnp.max(a) * G0
-    v = jnp.abs(random_rhs(jax.random.PRNGKey(2), n)) + 0.1
-    i_ideal = np.asarray(g @ v)
-    i_raw = np.asarray(nonideal.mna_mvm_currents(g, v, 1.0))
-    g_prog = nonideal.compensate_conductances(g, 1.0)
-    i_comp = np.asarray(nonideal.mna_mvm_currents(g_prog, v, 1.0))
-    raw_err = np.linalg.norm(i_raw - i_ideal)
-    comp_err = np.linalg.norm(i_comp - i_ideal)
-    assert comp_err < 0.2 * raw_err
+#  (test_compensation_against_exact_mna moved to tests/test_physics_oracle.py,
+#   home of everything pinned against the dense MNA oracle)
 
 
 def test_compensation_zero_r_identity():
