@@ -1,0 +1,172 @@
+"""Serving-engine SLO benchmark: open-loop Poisson traffic, with and
+without a scripted fault schedule.
+
+Open-loop means arrivals follow a pre-generated Poisson schedule whatever
+the engine's state (the standard way to measure a serving system - a
+closed loop would slow its own offered load down exactly when the engine
+struggles, hiding tail latency).  One seeded generator fixes the arrival
+times, tenant choices and right-hand sides, so baseline and faulted runs
+see byte-identical traffic and the chaos schedule (dispatch-counter
+keyed) is deterministic too.
+
+Reported per run (JSON -> artifacts/bench/engine.json, report-only keys:
+latencies in `_ms`, rates as ratios, so the nightly diff_bench prints
+them without gating - serving tails on shared CI boxes are too noisy to
+gate at +-25%):
+
+* p50_ms / p99_ms - submit->answer latency percentiles
+* goodput_rps     - answers within deadline per wall-clock second
+* miss_rate       - (expired + answered-late) / admitted
+* recovery_ms     - quarantine -> healthy wall time (faulted run)
+* mode mix        - analog vs digital-fallback answers
+
+The faulted run injects a severe stuck-at DeviceFault on one tenant plus
+one scripted dispatch exception mid-stream; the healthy tenants' p99 and
+the recovery time are the numbers the ISSUE acceptance criterion tracks.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, save_json
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+from repro.runtime import ChaosInjector, DeviceFault, DispatchException
+from repro.serve import AsyncSolverEngine, BackpressureError, SolverService
+
+SMOKE = False
+
+# severe stuck-at: guaranteed to trip the canary, never recoverable by luck
+SEVERE = NonidealConfig(sigma=0.02, p_stuck_off=0.6, g_stuck_off=0.0)
+
+
+def _percentile_ms(lat_s, q):
+    return float(np.percentile(np.asarray(lat_s) * 1e3, q)) if len(lat_s) \
+        else 0.0
+
+
+def run_traffic(*, n, m, rate_hz, n_requests, deadline_s, chaos_events=(),
+                seed=0, faulted_tenant="b0"):
+    """One open-loop run; returns the metrics dict."""
+    cfg = AnalogConfig(array_size=max(n // 2, 4),
+                       nonideal=NonidealConfig(sigma=0.02))
+    svc = SolverService(cfg, stages=1)
+    chaos = ChaosInjector(list(chaos_events)) if chaos_events else None
+    eng = AsyncSolverEngine(svc, max_batch=8, flush_interval=0.02,
+                            max_pending=512, retries=2, backoff=0.0,
+                            chaos=chaos)
+    key = jax.random.PRNGKey(seed)
+    for i in range(m):
+        eng.program("b%d" % i, wishart(jax.random.fold_in(key, i), n),
+                    jax.random.fold_in(key, 100 + i))
+
+    # pre-generate the whole trace: identical traffic across runs
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    tenants = rng.integers(0, m, n_requests)
+    rhs = [np.asarray(random_rhs(jax.random.fold_in(key, 500 + i), n))
+           for i in range(n_requests)]
+
+    futs, rejected = [], 0
+    with eng:
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            lag = arrivals[i] - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            try:
+                futs.append(eng.submit("b%d" % tenants[i], rhs[i],
+                                       deadline_s=deadline_s))
+            except BackpressureError:
+                rejected += 1          # open loop: admission says later
+        results, typed_errors = [], 0
+        for f in futs:
+            try:
+                results.append(f.result(timeout=600))
+            except Exception:                      # noqa: BLE001
+                typed_errors += 1      # typed engine error, never a hang
+        wall = time.perf_counter() - t0
+
+    lat = [r.latency_s for r in results]
+    in_slo = sum(1 for r in results if not r.deadline_missed)
+    admitted = len(futs)
+    st = eng.stats
+    return {
+        "requests": n_requests,
+        "admitted": admitted,
+        "rejected_backpressure": rejected,
+        "answered": len(results),
+        "typed_errors": typed_errors,
+        "p50_ms": _percentile_ms(lat, 50),
+        "p99_ms": _percentile_ms(lat, 99),
+        "wall_ms": wall * 1e3,
+        "offered_rps": n_requests / wall,
+        "goodput_rps": in_slo / wall,
+        "miss_rate": (st.deadline_misses / admitted) if admitted else 0.0,
+        "analog_answers": sum(1 for r in results if r.mode == "analog"),
+        "digital_answers": sum(1 for r in results if r.mode == "digital"),
+        "dispatches": st.dispatches,
+        "retries": st.retries,
+        "quarantines": st.quarantines,
+        "reprograms": st.reprograms,
+        "degraded": st.degraded,
+        "recovery_ms": [s * 1e3 for s in st.recovery_s],
+        "chaos_log": ([(i, type(e).__name__) for i, e in chaos.log]
+                      if chaos else []),
+    }
+
+
+def main():
+    if SMOKE:
+        n, m, n_requests, rate_hz = 16, 4, 48, 80.0
+    else:
+        n, m, n_requests, rate_hz = 32, 8, 200, 150.0
+    deadline_s = 5.0
+    # exception before the device fault so both fire even in the short
+    # smoke run (a 48-request smoke only reaches ~7 dispatch attempts)
+    fault_schedule = (
+        DispatchException(at_dispatch=3),
+        DeviceFault(at_dispatch=5, matrix_id="b0", nonideal=SEVERE),
+    )
+    # no `_s`/`_us` suffixes in the payload: diff_bench's name-based rule
+    # would gate them, and serving numbers on shared runners are
+    # deliberately report-only (see module docstring)
+    out = {"params": {"n": n, "tenants": m, "requests": n_requests,
+                      "rate_hz": rate_hz, "deadline_sec": deadline_s,
+                      "smoke": SMOKE}}
+    base = run_traffic(n=n, m=m, rate_hz=rate_hz, n_requests=n_requests,
+                       deadline_s=deadline_s)
+    out["baseline"] = base
+    csv_row("engine_baseline_m%d_n%d" % (m, n), 0.0,
+            "p50_ms=%.1f p99_ms=%.1f goodput=%.0f/s miss=%.3f" %
+            (base["p50_ms"], base["p99_ms"], base["goodput_rps"],
+             base["miss_rate"]))
+    faulted = run_traffic(n=n, m=m, rate_hz=rate_hz, n_requests=n_requests,
+                          deadline_s=deadline_s,
+                          chaos_events=fault_schedule)
+    out["faulted"] = faulted
+    rec = faulted["recovery_ms"][0] if faulted["recovery_ms"] else float("nan")
+    csv_row("engine_faulted_m%d_n%d" % (m, n), 0.0,
+            "p99_ms=%.1f goodput=%.0f/s miss=%.3f recovery_ms=%.0f "
+            "quarantines=%d" %
+            (faulted["p99_ms"], faulted["goodput_rps"],
+             faulted["miss_rate"], rec, faulted["quarantines"]))
+    save_json("engine", out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="nightly chaos smoke: 4 tenants, ~50 requests")
+    if ap.parse_args().smoke:
+        SMOKE = True
+    main()

@@ -12,6 +12,8 @@ artifacts/bench/ consumed by EXPERIMENTS.md.
   fig9_oracle - opt-in n >= 64 exact-MNA sweep (nightly artifact)
   fig10 - area/power breakdown + macro timing model
   hybrid, distributed, kernels - beyond-figure system benchmarks
+  engine - serving-engine SLOs under open-loop Poisson traffic, with and
+           without a scripted chaos schedule (report-only keys)
 
 Fast mode (default): fewer Monte-Carlo sims and capped sizes so the suite
 finishes in minutes on one CPU core; --paper runs the full 40-sim, 512-size
@@ -25,9 +27,10 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import (common, distributed_solver, fig6_accuracy,
-                        fig7_variation, fig8_twostage, fig9_interconnect,
-                        fig10_area_power, hybrid_refinement, kernel_bench)
+from benchmarks import (common, distributed_solver, engine_bench,
+                        fig6_accuracy, fig7_variation, fig8_twostage,
+                        fig9_interconnect, fig10_area_power,
+                        hybrid_refinement, kernel_bench)
 
 
 def main() -> None:
@@ -80,6 +83,7 @@ def main() -> None:
     if args.smoke:            # after fast-mode defaults: smoke tightens them
         kernel_bench.SMOKE = True
         hybrid_refinement.SMOKE = True
+        engine_bench.SMOKE = True
         common.N_SIMS_PAPER = 4
         common.SIZES_PAPER = (8, 16, 32, 64)
         fig7_variation.N_SIMS_PAPER = 4
@@ -102,6 +106,7 @@ def main() -> None:
         "hybrid": hybrid_refinement.main,
         "distributed": distributed_solver.main,
         "kernels": kernel_bench.main,
+        "engine": engine_bench.main,
     }
     # fig9_oracle is opt-in (--only): the exact-MNA sweep at n >= 64 is a
     # nightly artifact, too heavy for the default minutes-long suite.

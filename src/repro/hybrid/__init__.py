@@ -14,7 +14,9 @@ hybrid digital-analog approximate-inverse preconditioning):
     `gmres(m)` drivers: multi-RHS on leading axes, fuel-bounded
     `lax.while_loop`s, per-RHS convergence masks.
   * `refine`     - the fused analog-seed -> Krylov-refine path
-    (`solve_refined`) plus its Monte-Carlo batched and mesh-sharded forms.
+    (`solve_refined`) plus its Monte-Carlo batched and mesh-sharded forms,
+    and `solve_fallback`, the digital-only degraded serving mode (no
+    analog seed/preconditioner - safe whatever state the device is in).
   * `classic`    - the original fixed-iteration refinement helpers
     (`richardson_refine`, `cg_refine`, `iterations_to_tol`), kept for the
     paper-figure benchmarks; `repro.core.hybrid` re-exports everything
@@ -26,4 +28,5 @@ from repro.hybrid.krylov import KrylovResult, gmres, pcg  # noqa: F401
 from repro.hybrid.operators import (  # noqa: F401
     AnalogPreconditioner, matvec_from_dense)
 from repro.hybrid.refine import (  # noqa: F401
-    solve_refined, solve_refined_batched, solve_refined_batched_sharded)
+    solve_fallback, solve_refined, solve_refined_batched,
+    solve_refined_batched_sharded)

@@ -86,6 +86,49 @@ def solve_refined(a: jnp.ndarray, b: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Degraded-mode digital fallback (no analog operator involved)
+# ---------------------------------------------------------------------------
+
+def _fallback(a: jnp.ndarray, bt: jnp.ndarray, method: str, tol: float,
+              maxiter: int, restart: int) -> KrylovResult:
+    """Digital-only Krylov solve from a zero seed on leading-axis rhs."""
+    matvec = matvec_from_dense(a)
+    if method == "cg":
+        return pcg(matvec, bt, tol=tol, maxiter=maxiter)
+    if method == "gmres":
+        return gmres(matvec, bt, tol=tol, restart=restart, maxiter=maxiter)
+    raise ValueError(f"unknown method {method!r} (want 'cg' or 'gmres')")
+
+
+@partial(jax.jit, static_argnames=("method", "tol", "maxiter", "restart"))
+def _solve_fallback_jit(a, bt, method, tol, maxiter, restart):
+    return _fallback(a, bt, method, tol, maxiter, restart)
+
+
+def solve_fallback(a: jnp.ndarray, b: jnp.ndarray, *, method: str = "cg",
+                   tol: float = 1e-8, maxiter: int = 800, restart: int = 32,
+                   jit: bool = True) -> Tuple[jnp.ndarray, KrylovResult]:
+    """Fully digital solve of A x = b: the degraded serving mode.
+
+    The bottom rung of the quarantine -> re-program -> degrade ladder
+    (TESTING.md "serving robustness contract"): when the analog substrate
+    cannot be restored to health, the engine keeps answering from the
+    stored digital matrix alone.  Unlike `solve_refined` this takes *no*
+    analog seed and *no* analog preconditioner - a faulted crossbar can
+    produce non-finite seeds, which would poison the Krylov recurrence -
+    so it is correct whatever state the device is in, just slower (plain
+    CG/GMRES from zero; the mixed-precision IMC papers' pure-digital
+    baseline).  Same layout contract as `solve_refined`: b is `(n,)` or
+    `(n, k)` columns, x comes back shaped like b.
+    """
+    single = b.ndim == 1
+    bt = (b if single else b.T).astype(a.dtype)
+    run = _solve_fallback_jit if jit else _fallback
+    res = run(a, bt, method, float(tol), int(maxiter), int(restart))
+    return (res.x if single else res.x.T), res
+
+
+# ---------------------------------------------------------------------------
 # Monte-Carlo batched / sharded refinement
 # ---------------------------------------------------------------------------
 

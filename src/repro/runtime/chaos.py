@@ -1,0 +1,137 @@
+"""Deterministic fault injection for the serving stack (chaos harness).
+
+Production chaos testing injects failures at random; a *test* harness must
+inject them deterministically or the suite flakes.  Everything here is
+keyed on the engine's **dispatch counter** - a monotonically increasing
+integer the `AsyncSolverEngine` bumps once per dispatch *attempt* - never
+on wall-clock time, so a scripted scenario replays identically however
+fast or slow the host is.
+
+Three event kinds, mirroring the three production failure surfaces:
+
+* `DispatchException` - the dispatch itself blows up (a driver error, a
+  device OOM, a collective timeout surfacing as an exception).  Raised as
+  `ScriptedDispatchError`, a `RuntimeError` subclass, so the engine's
+  `retry_step` ladder treats it as transient.
+* `DispatchLatency` - a straggling dispatch (the `StepWatchdog` failure
+  mode): the harness sleeps inside the dispatch attempt.
+* `DeviceFault` - the crossbar degrades mid-session: the engine re-programs
+  the matrix's arrays under the event's faulty `NonidealConfig` (stuck-at
+  rates, drift - the knobs PR 6's physics subsystem added), which its
+  canary health check then discovers *through the answers*, exactly like a
+  real drift/stuck-at failure.  `persistent=True` re-applies the faulty
+  config on every recovery re-program too, forcing the engine down the
+  quarantine -> re-program -> degrade ladder to the digital fallback.
+
+Events fire once, at the first dispatch whose index reaches `at_dispatch`
+(>= semantics: an event scheduled "at 5" still fires if the engine happens
+to jump from 4 to 6).  `ChaosInjector.log` records every firing for test
+assertions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Sequence, Tuple, Union
+
+from repro.core.nonideal import NonidealConfig
+
+
+class ScriptedDispatchError(RuntimeError):
+    """A chaos-scripted transient dispatch failure (retriable)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchException:
+    """Raise `ScriptedDispatchError` inside dispatch attempt `at_dispatch`."""
+    at_dispatch: int
+    message: str = "chaos: scripted dispatch failure"
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchLatency:
+    """Sleep `seconds` inside dispatch attempt `at_dispatch` (straggler)."""
+    at_dispatch: int
+    seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceFault:
+    """Degrade `matrix_id`'s programmed arrays before dispatch `at_dispatch`.
+
+    The engine re-programs the matrix under `nonideal` (same dense target,
+    deterministic key), simulating a crossbar that developed stuck-at
+    faults or drifted - the answers go bad, the canary residual trips.
+    `persistent` faults survive recovery: the injector substitutes the
+    faulty config for whatever the engine tries to re-program with, so
+    health cannot be restored and the engine must degrade to digital.
+    """
+    at_dispatch: int
+    matrix_id: str
+    nonideal: NonidealConfig
+    persistent: bool = False
+
+
+ChaosEvent = Union[DispatchException, DispatchLatency, DeviceFault]
+
+
+class ChaosInjector:
+    """Scripted, dispatch-indexed fault schedule for `AsyncSolverEngine`.
+
+    The engine calls exactly three hooks, all from its worker thread (the
+    injector needs no locking of its own):
+
+    * `faults_due(idx)` at the start of a dispatch cycle - returns the
+      `DeviceFault`s to apply now.
+    * `on_dispatch(idx)` inside each dispatch attempt (inside the retry
+      ladder, so scripted exceptions exercise it) - sleeps scripted
+      latency, raises scripted exceptions.
+    * `reprogram_nonideal(matrix_id, cfg)` when recovery re-programs a
+      quarantined matrix - persistent faults override the engine's
+      recovery config here.
+    """
+
+    def __init__(self, events: Sequence[ChaosEvent] = (),
+                 sleep: Callable[[float], None] = time.sleep):
+        self.events: List[ChaosEvent] = list(events)
+        self.sleep = sleep
+        self.log: List[Tuple[int, ChaosEvent]] = []   # (dispatch idx, event)
+        self._fired: set = set()
+        self._persistent: Dict[str, NonidealConfig] = {}
+
+    def _due(self, idx: int, kind) -> List[ChaosEvent]:
+        due = []
+        for i, e in enumerate(self.events):
+            if i in self._fired or not isinstance(e, kind):
+                continue
+            if idx >= e.at_dispatch:
+                self._fired.add(i)
+                self.log.append((idx, e))
+                due.append(e)
+        return due
+
+    def faults_due(self, idx: int) -> List[DeviceFault]:
+        """Device faults to apply before dispatch cycle `idx` (fire once)."""
+        due = self._due(idx, DeviceFault)
+        for e in due:
+            if e.persistent:
+                self._persistent[e.matrix_id] = e.nonideal
+        return due
+
+    def on_dispatch(self, idx: int) -> None:
+        """Latency first (a straggler can also fail), then exceptions."""
+        for e in self._due(idx, DispatchLatency):
+            self.sleep(e.seconds)
+        for e in self._due(idx, DispatchException):
+            raise ScriptedDispatchError(e.message)
+
+    def reprogram_nonideal(self, matrix_id: str,
+                           nonideal: NonidealConfig) -> NonidealConfig:
+        """What a recovery re-program of `matrix_id` actually programs
+        under: the engine's recovery config, unless a persistent fault
+        pins the device in its broken state."""
+        return self._persistent.get(matrix_id, nonideal)
+
+    @property
+    def fired(self) -> int:
+        return len(self.log)

@@ -56,7 +56,10 @@ class StepWatchdog:
         if self._timer is not None:
             self._timer.cancel()
         dt = time.monotonic() - self._t0
-        if len(self.durations) >= self.warmup_steps:
+        # the window must be non-empty before a median exists, whatever
+        # warmup the caller asked for (warmup_steps=0 is a valid config:
+        # hard_timeout-only watchdogs in the serving engine use it)
+        if self.durations and len(self.durations) >= self.warmup_steps:
             med = self._median()
             if dt > self.factor * med:
                 self.straggles += 1
@@ -69,8 +72,20 @@ class StepWatchdog:
 
 def retry_step(fn: Callable[[], T], retries: int = 2,
                backoff: float = 0.0,
-               retriable=(RuntimeError,)) -> T:
-    """Run fn with bounded retries on transient runtime errors."""
+               retriable=(RuntimeError,),
+               on_retry: Optional[Callable[[int, BaseException], None]] = None,
+               sleep: Callable[[float], None] = time.sleep) -> T:
+    """Run fn with bounded retries on transient runtime errors.
+
+    `backoff` is the base of an exponential schedule: attempt k sleeps
+    `backoff * 2**k` before retrying (0 disables sleeping).  Non-retriable
+    exceptions propagate immediately; the last retriable failure re-raises
+    unchanged after `retries` retries so the caller's failover ladder (the
+    async engine quarantines / re-programs) sees the original error.
+    `on_retry(attempt_index, exc)` is called before each backoff sleep -
+    serving engines hang their retry counters there; `sleep` is injectable
+    so tests can pin the exact backoff schedule without waiting it out.
+    """
     for attempt in range(retries + 1):
         try:
             return fn()
@@ -78,6 +93,8 @@ def retry_step(fn: Callable[[], T], retries: int = 2,
             if attempt == retries:
                 raise
             log.warning("step failed (%s); retry %d/%d", e, attempt + 1, retries)
+            if on_retry is not None:
+                on_retry(attempt, e)
             if backoff:
-                time.sleep(backoff * (2 ** attempt))
+                sleep(backoff * (2 ** attempt))
     raise AssertionError("unreachable")

@@ -2,3 +2,6 @@ from repro.serve.serve_step import make_prefill_step, make_decode_step  # noqa: 
 from repro.serve.engine import Engine  # noqa: F401
 from repro.serve.solver_service import SolverService, MatrixStats  # noqa: F401
 from repro.serve.scheduler import PackedSolverScheduler  # noqa: F401
+from repro.serve.async_engine import (  # noqa: F401
+    AsyncSolverEngine, BackpressureError, DeadlineExceededError,
+    EngineError, EngineStats, EngineStoppedError, SolveResult)

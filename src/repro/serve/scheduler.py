@@ -185,10 +185,47 @@ class PackedSolverScheduler:
         return sum(self._sig_pending.values())
 
     def drain(self) -> None:
-        """Flush every remaining queue (end of a serving window)."""
+        """Flush every remaining queue (end of a serving window).
+
+        Exception safety (the scheduler-layer extension of `flush_all`'s
+        all-or-nothing staging): `flush_all` commits no queue/counter state
+        until every bucket's dispatch succeeded, so a dispatch that raises
+        mid-drain propagates with the service queues, the per-signature
+        counters and every open ticket exactly as they were - `drain()`
+        (or the next triggering submit) can simply be retried.  Counters
+        are cleared only after `flush_all` returns, i.e. only once the
+        queues really were consumed."""
         answers = self.service.flush_all()
         self._sig_pending.clear()   # queues consumed whatever happens next
         self._deliver(answers)
+
+    def check_consistency(self) -> None:
+        """Assert scheduler counters agree with the service's queues.
+
+        The invariant the exception-safety contract preserves across
+        failed dispatches: for every tenant, open tickets (issued minus
+        answered) equal the service's pending queue depth, and the
+        per-signature counters are exactly the bucket sums of those
+        depths.  Cheap (host-side dict walks); failure-injection tests
+        call it after every induced dispatch error, and a production
+        caller may call it at flush boundaries."""
+        per_sig: Dict[tuple, int] = {}
+        for mid in self.service.matrix_ids:
+            depth = self.service.pending(mid)
+            open_tickets = (self._submitted.get(mid, 0)
+                            - self._delivered.get(mid, 0))
+            if depth != open_tickets:
+                raise AssertionError(
+                    f"tenant {mid!r}: {depth} queued rhs vs "
+                    f"{open_tickets} open tickets")
+            if depth:
+                sig = self.service.signature(mid)
+                per_sig[sig] = per_sig.get(sig, 0) + depth
+        counters = {s: c for s, c in self._sig_pending.items() if c}
+        if per_sig != counters:
+            raise AssertionError(
+                f"per-signature counters {counters} disagree with "
+                f"service queues {per_sig}")
 
     def ready(self, ticket: tuple) -> bool:
         return ticket in self._results

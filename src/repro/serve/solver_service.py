@@ -39,7 +39,19 @@ from repro.core.blockamc import (PackedArenaPlan, ProgrammedSolver,
                                  _execute_arena_packed_donated,
                                  pack_arena_plans, pad_rhs_pow2,
                                  plan_signature)
-from repro.hybrid import AnalogPreconditioner, solve_refined as _solve_refined
+from repro.hybrid import (AnalogPreconditioner,
+                          solve_fallback as _solve_fallback,
+                          solve_refined as _solve_refined)
+
+
+def _require_float_dtype(name: str, arr) -> None:
+    """Front-door dtype gate: analog programming and dispatch are float
+    pipelines; an int/bool/complex input would be silently cast (or crash
+    deep inside a packed dispatch), so reject it with the field name."""
+    if not jnp.issubdtype(jnp.asarray(arr).dtype, jnp.floating):
+        raise ValueError(
+            f"{name} must have a floating dtype, got {jnp.asarray(arr).dtype}"
+            f" - cast explicitly if the int/bool input is intentional")
 
 
 @dataclasses.dataclass
@@ -74,6 +86,7 @@ class SolverService:
         self._queues: Dict[str, List[jnp.ndarray]] = {}
         self._stats: Dict[str, MatrixStats] = {}
         self._sigs: Dict[str, tuple] = {}
+        self._cfgs: Dict[str, AnalogConfig] = {}   # per-matrix cfg override
         # packed cross-tenant plans: one cached (id tuple, pack) per
         # signature - the cache is bounded by the number of signatures,
         # not by the 2^M possible pending subsets.  A flush whose bucket
@@ -83,7 +96,8 @@ class SolverService:
                                        PackedArenaPlan]] = {}
 
     def program(self, matrix_id: str, a: jnp.ndarray,
-                key: Optional[jax.Array] = None) -> ProgrammedSolver:
+                key: Optional[jax.Array] = None,
+                cfg: Optional[AnalogConfig] = None) -> ProgrammedSolver:
         """Program matrix `a` under `matrix_id` (replaces any previous one).
 
         Blocks until the first solve is hot (plan built, operators
@@ -91,15 +105,38 @@ class SolverService:
         shapes) so subsequent solves run at marginal cost - the measured
         wall time is recorded as the matrix's programming cost.  Refuses to
         replace a matrix that still has queued, unanswered right-hand sides
-        (flush first).
+        (flush first - or `discard_pending` on a failover path that owns
+        its own request replay, cf. serve/async_engine.py).
+
+        `cfg` overrides the service config for this matrix only - the
+        re-program failover path uses it to turn write-verify / fault
+        remapping on for a quarantined matrix without re-bucketing healthy
+        tenants.  Per-matrix configs compose with `flush_all` for free:
+        the config is part of `plan_signature`, so differently-configured
+        tenants simply land in different packing buckets.
+
+        Front-door validation: `a` must be a finite square float matrix.
+        A NaN/Inf entry would not fail here - it would poison the Schur
+        cascade and come back as NaN *answers*, possibly for co-batched
+        tenants sharing a packed dispatch - so it is rejected with a
+        ValueError before any state changes.
         """
         if self._queues.get(matrix_id):
             raise RuntimeError(
                 f"matrix {matrix_id!r} has {len(self._queues[matrix_id])} "
                 f"pending rhs; flush before re-programming")
+        _require_float_dtype("matrix", a)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"matrix must be square 2-D, got {a.shape}")
+        if not bool(jnp.all(jnp.isfinite(a))):
+            raise ValueError(
+                f"matrix {matrix_id!r} contains non-finite entries; "
+                f"refusing to program (NaN/Inf would poison every solve "
+                f"dispatched against it)")
+        cfg = cfg if cfg is not None else self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         t0 = time.perf_counter()
-        solver = ProgrammedSolver.program(a, key, self.cfg, self.stages,
+        solver = ProgrammedSolver.program(a, key, cfg, self.stages,
                                           mode=self.mode)
         # Warm the jitted executor (single-rhs and smallest flush batch) as
         # part of programming time; solve_many pads to powers of two, so
@@ -114,8 +151,8 @@ class SolverService:
         self._queues[matrix_id] = []
         self._stats[matrix_id] = MatrixStats(
             program_time_s=time.perf_counter() - t0)
-        self._sigs[matrix_id] = plan_signature(a.shape[0], self.stages,
-                                               self.cfg)
+        self._cfgs[matrix_id] = cfg
+        self._sigs[matrix_id] = plan_signature(a.shape[0], self.stages, cfg)
         # any cached pack containing the replaced plan is stale
         self._packs = {sig: (ids, pp) for sig, (ids, pp)
                        in self._packs.items() if matrix_id not in ids}
@@ -130,6 +167,16 @@ class SolverService:
     def signature(self, matrix_id: str) -> tuple:
         """The matrix's `plan_signature` (the flush_all bucketing key)."""
         return self._sigs[matrix_id]
+
+    def dense(self, matrix_id: str) -> jnp.ndarray:
+        """The stored digital copy of the matrix (residual checks, hybrid
+        refinement, digital fallback)."""
+        return self._dense[matrix_id]
+
+    def matrix_cfg(self, matrix_id: str) -> AnalogConfig:
+        """The config this matrix was programmed under (per-matrix
+        override aware; the service default when none was given)."""
+        return self._cfgs[matrix_id]
 
     @property
     def matrix_ids(self):
@@ -179,6 +226,25 @@ class SolverService:
         self._record(matrix_id, 1 if b.ndim == 1 else b.shape[1], info)
         return x
 
+    def solve_fallback(self, matrix_id: str, b: jnp.ndarray, *,
+                       tol: float = 1e-6, method: str = "cg",
+                       maxiter: int = 800, restart: int = 32) -> jnp.ndarray:
+        """Digital-only solve against the stored dense matrix (degraded
+        mode - no analog seed, no analog preconditioner).
+
+        The bottom of the quarantine -> re-program -> degrade ladder: the
+        programmed arrays are not touched at all, so this answers
+        correctly however faulted the device is (a broken crossbar can
+        emit non-finite seeds that `solve_refined` would propagate into
+        the Krylov recurrence).  Counted as a refined call in the stats -
+        the digital iteration spend is the metric that matters.
+        """
+        a = self._dense[matrix_id]
+        x, info = _solve_fallback(a, b, method=method, tol=tol,
+                                  maxiter=maxiter, restart=restart)
+        self._record(matrix_id, 1 if b.ndim == 1 else b.shape[1], info)
+        return x
+
     def _refine(self, matrix_id: str, b: jnp.ndarray, *, tol: float = 1e-6,
                 method: str = "cg", maxiter: int = 400, restart: int = 32,
                 use_precond: bool = False):
@@ -202,12 +268,38 @@ class SolverService:
         n = self._solvers[matrix_id].n
         if b.shape != (n,):
             raise ValueError(f"submit takes one ({n},) rhs, got {b.shape}")
+        _require_float_dtype("rhs", b)
+        host = np.array(b)
+        # Finite-ness is checked on the host snapshot we keep anyway (no
+        # extra device sync): one NaN rhs admitted here would ride a fused
+        # multi-rhs dispatch and - through the shared matmul - poison
+        # nothing *numerically* for neighbours, but it would come back as
+        # a NaN answer long after the caller that sent it is gone, and in
+        # a packed bucket it would trip residual health tripwires for the
+        # whole tenant.  Reject at the front door instead.
+        if not np.all(np.isfinite(host)):
+            raise ValueError(
+                f"rhs for {matrix_id!r} contains non-finite entries; "
+                f"rejected at admission (nothing was queued)")
         q = self._queues[matrix_id]
-        q.append(np.array(b))
+        q.append(host)
         return len(q) - 1
 
     def pending(self, matrix_id: str) -> int:
         return len(self._queues[matrix_id])
+
+    def discard_pending(self, matrix_id: str) -> int:
+        """Drop every queued rhs of one matrix; returns how many.
+
+        The failover escape hatch: `program` refuses to replace a matrix
+        with a live queue because the *service* would silently lose those
+        requests.  A layer that keeps its own authoritative request copies
+        (the async engine replays in-flight requests after a re-program)
+        discards the service-side copies first, re-programs, and replays.
+        """
+        k = len(self._queues[matrix_id])
+        self._queues[matrix_id] = []
+        return k
 
     def flush(self, matrix_id: str, *, refined: bool = False,
               **refine_kw) -> jnp.ndarray:

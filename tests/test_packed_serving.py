@@ -410,3 +410,86 @@ def test_scheduler_detects_external_queue_writes():
     np.testing.assert_allclose(np.asarray(sched.result(t_new)),
                                np.asarray(svc.solver(ids[0]).solve(b2)),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_scheduler_survives_injected_dispatch_failure(monkeypatch):
+    """Exception-safety audit (ISSUE satellite): a dispatch that raises
+    mid-drain leaves the service queues, the per-signature counters and
+    every open ticket exactly as they were - `check_consistency` holds
+    after the failure, a plain retry succeeds, and every ticket delivers
+    its own tenant's numbers."""
+    svc, ids = _service(m=3)
+    sched = PackedSolverScheduler(svc, max_batch=8)
+    b = [jax.random.normal(jax.random.fold_in(KB, j), (N,))
+         for j in range(5)]
+    tickets = [sched.submit(ids[j % 3], bj) for j, bj in enumerate(b)]
+    sched.check_consistency()
+
+    # inject: the packed executor dies on its next invocation only
+    real = blockamc._execute_arena_packed_donated
+    blows = {"left": 1}
+
+    def exploding(pp, bs):
+        if blows["left"]:
+            blows["left"] -= 1
+            raise RuntimeError("injected device OOM")
+        return real(pp, bs)
+
+    monkeypatch.setattr(blockamc, "_execute_arena_packed_donated",
+                        exploding)
+    import repro.serve.solver_service as ss
+    monkeypatch.setattr(ss, "_execute_arena_packed_donated", exploding)
+
+    with pytest.raises(RuntimeError, match="injected device OOM"):
+        sched.drain()
+    # all-or-nothing: nothing delivered, nothing dropped, counters intact
+    assert sched.pending() == 5
+    assert all(svc.pending(mid) > 0 for mid in ids)
+    assert not any(sched.ready(t) for t in tickets)
+    sched.check_consistency()
+    assert all(svc.stats(mid).rhs_served == 0 for mid in ids)
+
+    sched.drain()                                # plain retry, no reset
+    sched.check_consistency()
+    assert sched.pending() == 0
+    for t, bj in zip(tickets, b):
+        assert sched.ready(t)
+        np.testing.assert_allclose(np.asarray(sched.result(t)),
+                                   np.asarray(svc.solver(t[0]).solve(bj)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_scheduler_failure_on_triggering_submit_keeps_ticket(monkeypatch):
+    """The same injected failure on the submit that *triggers* a flush:
+    the submit raises, but its rhs and ticket stay queued and the next
+    drain answers them (nothing queued is ever dropped)."""
+    svc, ids = _service(m=2)
+    sched = PackedSolverScheduler(svc, max_batch=2)
+    b0 = jax.random.normal(KB, (N,))
+    b1 = jax.random.normal(jax.random.fold_in(KB, 1), (N,))
+    t0 = sched.submit(ids[0], b0)
+
+    real = blockamc._execute_arena_packed_donated
+    blows = {"left": 1}
+
+    def exploding(pp, bs):
+        if blows["left"]:
+            blows["left"] -= 1
+            raise RuntimeError("injected")
+        return real(pp, bs)
+
+    monkeypatch.setattr(blockamc, "_execute_arena_packed_donated",
+                        exploding)
+    import repro.serve.solver_service as ss
+    monkeypatch.setattr(ss, "_execute_arena_packed_donated", exploding)
+
+    with pytest.raises(RuntimeError, match="injected"):
+        sched.submit(ids[1], b1)                 # 2nd pending -> flush dies
+    t1 = (ids[1], 0)                             # its ticket is well-defined
+    sched.check_consistency()
+    assert sched.pending() == 2
+    sched.drain()
+    for t, bj in ((t0, b0), (t1, b1)):
+        np.testing.assert_allclose(np.asarray(sched.result(t)),
+                                   np.asarray(svc.solver(t[0]).solve(bj)),
+                                   rtol=1e-5, atol=1e-6)

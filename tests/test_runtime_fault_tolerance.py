@@ -1,0 +1,208 @@
+"""Deep coverage of runtime fault-tolerance pieces the serving engine
+leans on (`StepWatchdog`, `retry_step`) plus `ElasticMesh` gaps.
+
+The basics (straggler flag fires, flaky fn recovers, exhaustion
+re-raises) live in tests/test_optim_runtime.py; this file pins the
+*contracts*: exact exponential backoff schedule (injected sleep, no
+waiting), the `on_retry` hook ordering, non-retriable pass-through,
+warmup and rolling-window semantics, and the hard-timeout timer that
+fires mid-step rather than after it.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.runtime.elastic import ElasticMesh
+from repro.runtime.fault_tolerance import StepWatchdog, retry_step
+
+
+# ------------------------------ retry_step --------------------------------
+
+def test_retry_backoff_schedule_is_exponential():
+    sleeps, hooks = [], []
+
+    def broken():
+        raise RuntimeError("transient")
+
+    with pytest.raises(RuntimeError):
+        retry_step(broken, retries=3, backoff=0.1,
+                   on_retry=lambda i, e: hooks.append(i),
+                   sleep=sleeps.append)
+    # attempt k sleeps backoff * 2**k; no sleep after the final give-up
+    assert sleeps == pytest.approx([0.1, 0.2, 0.4])
+    assert hooks == [0, 1, 2]
+
+
+def test_retry_zero_backoff_never_sleeps():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise RuntimeError("once")
+        return "ok"
+
+    assert retry_step(flaky, retries=2, backoff=0.0,
+                      sleep=sleeps.append) == "ok"
+    assert sleeps == []
+
+
+def test_retry_on_retry_sees_the_exception():
+    seen = []
+
+    def flaky():
+        if not seen:
+            raise RuntimeError("first failure")
+        return 1
+
+    assert retry_step(flaky, retries=1,
+                      on_retry=lambda i, e: seen.append((i, str(e)))) == 1
+    assert seen == [(0, "first failure")]
+
+
+def test_retry_nonretriable_propagates_immediately():
+    calls = {"n": 0}
+
+    def typed():
+        calls["n"] += 1
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        retry_step(typed, retries=5, retriable=(RuntimeError,))
+    assert calls["n"] == 1             # no retry burned on a typed error
+
+
+def test_retry_reraises_original_exception_object():
+    err = RuntimeError("the original")
+
+    def broken():
+        raise err
+
+    with pytest.raises(RuntimeError) as ei:
+        retry_step(broken, retries=1)
+    assert ei.value is err             # failover ladders match on identity
+
+
+def test_retry_custom_retriable_tuple():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("fd gone")
+        return calls["n"]
+
+    assert retry_step(flaky, retries=1, retriable=(OSError,)) == 2
+
+
+# ------------------------------ StepWatchdog ------------------------------
+
+def test_watchdog_quiet_during_warmup():
+    events = []
+    wd = StepWatchdog(factor=1.0, warmup_steps=5,
+                      on_straggle=lambda t, m: events.append(t))
+    # every step "exceeds" factor x median at factor=1, but warmup masks it
+    for _ in range(5):
+        with wd:
+            time.sleep(0.002)
+    assert events == []
+    assert len(wd.durations) == 5
+
+
+def test_watchdog_median_is_robust_to_one_outlier():
+    events = []
+    wd = StepWatchdog(factor=3.0, warmup_steps=3,
+                      on_straggle=lambda t, m: events.append((t, m)))
+    for _ in range(5):
+        with wd:
+            time.sleep(0.01)
+    with wd:
+        time.sleep(0.1)                # straggler no 1
+    # the outlier joined the window but the *median* barely moved: a
+    # subsequent normal step must not be flagged ...
+    with wd:
+        time.sleep(0.01)
+    # ... and a second genuine straggler still is
+    with wd:
+        time.sleep(0.1)
+    assert wd.straggles == 2
+    assert all(t > 3.0 * m for t, m in events)
+
+
+def test_watchdog_rolling_window_is_bounded():
+    wd = StepWatchdog(factor=100.0, warmup_steps=0)
+    for _ in range(130):
+        with wd:
+            pass
+    assert len(wd.durations) == 100    # oldest durations fell off
+
+
+def test_watchdog_hard_timeout_fires_mid_step():
+    fired = threading.Event()
+    wd = StepWatchdog(factor=3.0, warmup_steps=0, hard_timeout=0.05,
+                      on_straggle=lambda t, m: fired.set())
+    with wd:
+        # the timer must fire while the step is still running - that is
+        # the hang-detection contract (a hung step never reaches __exit__)
+        assert fired.wait(timeout=2.0)
+    assert fired.is_set()
+
+
+def test_watchdog_hard_timeout_cancelled_on_fast_step():
+    fired = threading.Event()
+    wd = StepWatchdog(factor=3.0, warmup_steps=0, hard_timeout=0.2,
+                      on_straggle=lambda t, m: fired.set())
+    with wd:
+        pass
+    time.sleep(0.3)                    # past the would-be deadline
+    assert not fired.is_set()
+
+
+def test_watchdog_exception_still_cancels_timer_and_records():
+    fired = threading.Event()
+    wd = StepWatchdog(factor=3.0, warmup_steps=0, hard_timeout=0.2,
+                      on_straggle=lambda t, m: fired.set())
+    with pytest.raises(RuntimeError):
+        with wd:
+            raise RuntimeError("step died")
+    time.sleep(0.3)
+    assert not fired.is_set()          # timer cancelled despite the raise
+    assert len(wd.durations) == 1      # the failed step's duration counts
+
+
+# ------------------------------ ElasticMesh -------------------------------
+
+def test_elastic_min_model_axis_floor():
+    # 64 devices: candidates 16, 8, 4 all divide; the largest >= floor wins
+    assert ElasticMesh(min_model_axis=4).choose_shape(64) == (4, 16)
+    # floor prunes the small candidates: 2 would divide 10, but 2 < 4
+    assert ElasticMesh(min_model_axis=4).choose_shape(10) == (10, 1)
+
+
+def test_elastic_min_model_axis_forces_fallback():
+    # nothing >= the floor divides 6 -> the (n, 1) fallback
+    em = ElasticMesh(min_model_axis=4)
+    assert em.choose_shape(6) == (6, 1)
+
+
+def test_elastic_custom_candidate_order_is_respected():
+    em = ElasticMesh(model_axis_candidates=(3, 2, 1))
+    assert em.choose_shape(12) == (4, 3)
+    assert em.choose_shape(8) == (4, 2)
+
+
+def test_elastic_divisor_constraints_combine():
+    em = ElasticMesh()
+    # model axis must divide every listed model dim: gcd pressure
+    assert em.choose_shape(64, model_divisors=(12, 20)) == (16, 4)
+    assert em.choose_shape(64, model_divisors=(7,)) == (64, 1)
+
+
+def test_elastic_make_mesh_shapes_and_axis_names():
+    em = ElasticMesh()
+    import jax
+    mesh = em.make_mesh(jax.devices())
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.size == len(jax.devices())

@@ -140,3 +140,117 @@ def test_refined_flush_gmres_mode():
         b = jax.random.normal(jax.random.fold_in(KB, j), (N,))
         r = float(jnp.linalg.norm(b - a @ xs[:, j]) / jnp.linalg.norm(b))
         assert r <= 1e-4
+
+
+# ------------------- front-door validation (admission) --------------------
+
+def test_program_rejects_nonfinite_matrix_before_state_change():
+    svc, a = _service()
+    bad = np.asarray(a).copy()
+    bad[2, 3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.program("m1", jnp.asarray(bad), KN)
+    assert "m1" not in svc.matrix_ids           # nothing half-programmed
+    inf = np.asarray(a).copy()
+    inf[0, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.program("m1", jnp.asarray(inf), KN)
+
+
+def test_program_rejects_wrong_dtype_and_shape():
+    svc, _ = _service()
+    with pytest.raises(ValueError, match="floating"):
+        svc.program("m1", jnp.eye(N, dtype=jnp.int32), KN)
+    with pytest.raises(ValueError, match="square"):
+        svc.program("m1", jnp.zeros((N, N + 1)), KN)
+    with pytest.raises(ValueError, match="square"):
+        svc.program("m1", jnp.zeros((N,)), KN)
+    assert "m1" not in svc.matrix_ids
+
+
+def test_submit_rejects_nonfinite_and_wrong_dtype():
+    svc, _ = _service()
+    bad = np.ones(N)
+    bad[7] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.submit("m0", bad)
+    with pytest.raises(ValueError, match="floating"):
+        svc.submit("m0", np.arange(N))          # int64
+    assert svc.pending("m0") == 0               # nothing was queued
+
+
+def test_nan_rhs_cannot_corrupt_cobatched_tenants():
+    """One tenant's NaN rhs must be rejected at its own front door - a
+    co-batched healthy tenant's packed answers stay exactly what they
+    would have been (the satellite regression from ISSUE.md)."""
+    svc = SolverService(CFG, stages=1)
+    a0, a1 = wishart(KA, N), wishart(jax.random.fold_in(KA, 1), N)
+    svc.program("good", a0, KN)
+    svc.program("evil", a1, jax.random.fold_in(KN, 1))
+    good_b = [random_rhs(jax.random.fold_in(KB, j), N) for j in range(2)]
+    for b in good_b:
+        svc.submit("good", b)
+    bad = np.ones(N)
+    bad[0] = np.inf
+    with pytest.raises(ValueError):
+        svc.submit("evil", bad)
+    svc.submit("evil", random_rhs(jax.random.fold_in(KB, 9), N))
+    answers = svc.flush_all()
+    # reference: the same healthy queue flushed alone on a fresh service
+    ref = SolverService(CFG, stages=1)
+    ref.program("good", a0, KN)
+    for b in good_b:
+        ref.submit("good", b)
+    np.testing.assert_allclose(np.asarray(answers["good"]),
+                               np.asarray(ref.flush("good")),
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.isfinite(answers["evil"]))
+
+
+def test_discard_pending_unblocks_reprogram():
+    svc, a = _service()
+    svc.submit("m0", random_rhs(KB, N))
+    with pytest.raises(RuntimeError, match="pending"):
+        svc.program("m0", a, KN)
+    assert svc.discard_pending("m0") == 1
+    assert svc.pending("m0") == 0
+    svc.program("m0", a, KN)                    # now allowed
+    assert svc.discard_pending("m0") == 0       # idempotent on empty
+
+
+def test_per_matrix_cfg_override_rebuckets_only_that_tenant():
+    svc, a = _service()
+    a1 = wishart(jax.random.fold_in(KA, 2), N)
+    svc.program("m1", a1, jax.random.fold_in(KN, 2))
+    assert svc.signature("m0") == svc.signature("m1")
+    wv = CFG.with_(nonideal=NonidealConfig(sigma=0.02, wv_iters=2))
+    svc.program("m1", a1, jax.random.fold_in(KN, 3), cfg=wv)
+    assert svc.signature("m0") != svc.signature("m1")
+    assert svc.matrix_cfg("m1") is wv
+    assert svc.matrix_cfg("m0") is CFG
+    # differently-configured tenants still flush together (separate
+    # buckets inside one flush_all call)
+    svc.submit("m0", random_rhs(KB, N))
+    svc.submit("m1", random_rhs(jax.random.fold_in(KB, 1), N))
+    answers = svc.flush_all()
+    assert set(answers) == {"m0", "m1"}
+    for mid, am in (("m0", a), ("m1", a1)):
+        b = random_rhs(KB if mid == "m0" else jax.random.fold_in(KB, 1), N)
+        r = float(np.linalg.norm(np.asarray(am) @ answers[mid][:, 0]
+                                 - np.asarray(b))
+                  / np.linalg.norm(np.asarray(b)))
+        assert r < 0.6                          # raw analog quality
+
+
+def test_solve_fallback_is_digital_grade_and_counted():
+    svc, a = _service()
+    b = random_rhs(KB, N)
+    x = svc.solve_fallback("m0", b, tol=1e-6)
+    res = float(jnp.linalg.norm(b - a @ x) / jnp.linalg.norm(b))
+    assert res <= 1e-5                          # no analog error floor
+    bs = jnp.stack([b, random_rhs(jax.random.fold_in(KB, 1), N)], axis=1)
+    xs = svc.solve_fallback("m0", bs, tol=1e-6)
+    assert xs.shape == (N, 2)
+    st = svc.stats("m0")
+    assert st.rhs_served == 3 and st.refined_calls == 2
+    assert st.refine_iters >= 1                 # digital spend is visible
