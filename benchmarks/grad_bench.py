@@ -1,0 +1,102 @@
+"""Differentiable-solver benchmarks: backward cost + calibration curve.
+
+Two artifacts feed artifacts/bench/grad.json (TESTING.md "differentiable
+solver contract"):
+
+  * backward-vs-forward marginal cost of the arena executor's implicit-diff
+    VJP.  The contract is backward <= 1.5x forward: the VJP is one
+    transposed cascade (same shared-stack batched dots as the forward, no
+    re-factorization, no re-programming), so a value-and-grad call costs
+    about one extra forward solve.  `fwd_us` / `grad_us` are gated by the
+    nightly diff_bench 25% rolling-regression rule; the ratio itself is a
+    report-only key (no `_us` suffix) since it divides two noisy medians.
+
+  * wire-calibration convergence: loss and r_hat trajectories of
+    `repro.calib.calibrate_wire` recovering a planted 1 Ohm from the exact
+    nodal oracle, plus the final relative recovery error (acceptance:
+    < 5%).  Report-only keys - accuracy, not wall time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, save_json, timed
+from repro.calib import calibrate_wire
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+
+SMOKE = False
+
+
+def _problem(n: int):
+    ka, kb, kn = jax.random.split(jax.random.PRNGKey(5), 3)
+    a = jax.random.normal(ka, (n, n), jnp.float32)
+    a = a @ a.T + n * jnp.eye(n, dtype=jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    return a, b, kn
+
+
+def backward_cost_bench(out):
+    """Jitted forward solve vs jitted value-and-grad through the arena."""
+    sizes = (32,) if SMOKE else (32, 64)
+    for n in sizes:
+        a, b, kn = _problem(n)
+        cfg = AnalogConfig(array_size=n // 4,
+                           nonideal=NonidealConfig(sigma=0.05, r_wire=1.0))
+        solver = blockamc.ProgrammedSolver.program(a, kn, cfg, stages=2)
+        ap = solver.arena
+
+        fwd = jax.jit(lambda bb: blockamc.execute_arena(ap, bb))
+        vag = jax.jit(jax.value_and_grad(
+            lambda bb: jnp.sum(blockamc.execute_arena(ap, bb))))
+
+        fwd_us = timed(fwd, b)
+        grad_us = timed(vag, b)
+        # marginal backward cost in units of one forward solve; the
+        # forward inside value_and_grad is re-paid, so the pure backward
+        # increment is (grad - fwd) / fwd
+        marginal = max(grad_us - fwd_us, 0.0) / fwd_us
+        csv_row(f"grad_arena_n{n}", grad_us,
+                f"fwd={fwd_us:.1f}us;marginal_bwd={marginal:.2f}x_fwd")
+        out[f"arena_n{n}"] = {
+            "fwd_us": fwd_us,
+            "grad_us": grad_us,
+            "marginal_bwd_over_fwd": marginal,   # report-only ratio
+        }
+
+
+def calibration_bench(out):
+    """Wire-recovery convergence curve (accuracy artifact, report-only)."""
+    n = 8 if SMOKE else 16
+    steps = 60 if SMOKE else 120
+    ka = jax.random.PRNGKey(9)
+    a = jax.random.normal(ka, (n, n), jnp.float64 if
+                          jax.config.jax_enable_x64 else jnp.float32)
+    a = a @ a.T + n * jnp.eye(n, dtype=a.dtype)
+    cal = calibrate_wire(a, r_true=1.0, steps=steps)
+    rel = cal.rel_err(1.0)
+    csv_row(f"grad_calib_n{n}", 0.0,
+            f"steps={steps};r_hat={cal.r_hat:.4f};rel_err={rel:.4f}")
+    # thin the curves to ~20 points so the artifact stays small
+    stride = max(1, steps // 20)
+    out[f"calib_n{n}"] = {
+        "steps": steps,
+        "r_true": 1.0,
+        "r_hat": cal.r_hat,
+        "rel_err": rel,
+        "loss_curve": list(cal.history[::stride]) + [cal.history[-1]],
+        "r_curve": list(cal.r_history[::stride]) + [cal.r_history[-1]],
+    }
+
+
+def main() -> None:
+    out = {}
+    backward_cost_bench(out)
+    calibration_bench(out)
+    save_json("grad", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ artifacts/bench/ consumed by EXPERIMENTS.md.
   hybrid, distributed, kernels - beyond-figure system benchmarks
   engine - serving-engine SLOs under open-loop Poisson traffic, with and
            without a scripted chaos schedule (report-only keys)
+  grad   - differentiable solver: backward-vs-forward marginal cost of the
+           implicit-diff VJP + wire-calibration convergence curve
 
 Fast mode (default): fewer Monte-Carlo sims and capped sizes so the suite
 finishes in minutes on one CPU core; --paper runs the full 40-sim, 512-size
@@ -29,7 +31,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (common, distributed_solver, engine_bench,
                         fig6_accuracy, fig7_variation, fig8_twostage,
-                        fig9_interconnect, fig10_area_power,
+                        fig9_interconnect, fig10_area_power, grad_bench,
                         hybrid_refinement, kernel_bench)
 
 
@@ -84,6 +86,7 @@ def main() -> None:
         kernel_bench.SMOKE = True
         hybrid_refinement.SMOKE = True
         engine_bench.SMOKE = True
+        grad_bench.SMOKE = True
         common.N_SIMS_PAPER = 4
         common.SIZES_PAPER = (8, 16, 32, 64)
         fig7_variation.N_SIMS_PAPER = 4
@@ -107,6 +110,7 @@ def main() -> None:
         "distributed": distributed_solver.main,
         "kernels": kernel_bench.main,
         "engine": engine_bench.main,
+        "grad": grad_bench.main,
     }
     # fig9_oracle is opt-in (--only): the exact-MNA sweep at n >= 64 is a
     # nightly artifact, too heavy for the default minutes-long suite.

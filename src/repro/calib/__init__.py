@@ -1,0 +1,16 @@
+"""Gradient-based calibration of the analog substrate's physics knobs.
+
+The differentiable solver (TESTING.md "differentiable solver contract")
+makes the whole programmed pipeline - effective-operator finalization,
+arena compilation, cascade execution - reverse-mode differentiable in the
+wire resistance via the `r_wire` override threaded through
+`core.blockamc.finalize`.  This package closes the loop: fit the
+first-order wire model's parameters to measurements of a *real* (here:
+exactly simulated) crossbar by plain gradient descent on solver outputs.
+
+  * `wire` - recover a planted wire segment resistance by matching the
+    differentiable first-order model against the exact nodal MNA oracle
+    (`repro.physics.nodal`).
+"""
+from repro.calib.wire import (  # noqa: F401
+    WireCalibration, calibrate_wire, calibrate_wire_to)

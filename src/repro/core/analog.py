@@ -91,14 +91,18 @@ class CrossbarPair:
     def shape(self):
         return self.gpos.shape
 
-    def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
+    def a_eff(self, cfg: AnalogConfig, r_wire=None) -> jnp.ndarray:
         """The matrix the circuit actually computes with: retention drift on
         the device state, then the configured wire model ("first_order" hot
         path or the exact "nodal" oracle) - the one readout pipeline shared
-        with TileGrid, so all four executors see identical physics."""
+        with TileGrid, so all four executors see identical physics.
+        `r_wire` optionally overrides the config wire resistance with a
+        traced scalar (differentiable first-order model; calibration)."""
         ni = cfg.nonideal
-        gp = nonideal.wire_readout(nonideal.readout_conductance(self.gpos, ni), ni)
-        gn = nonideal.wire_readout(nonideal.readout_conductance(self.gneg, ni), ni)
+        gp = nonideal.wire_readout(
+            nonideal.readout_conductance(self.gpos, ni), ni, r_wire=r_wire)
+        gn = nonideal.wire_readout(
+            nonideal.readout_conductance(self.gneg, ni), ni, r_wire=r_wire)
         return (gp - gn) / self.g0
 
 
@@ -310,12 +314,15 @@ class TileGrid:
     def shape(self):
         return self.gpos.shape
 
-    def a_eff(self, cfg: AnalogConfig) -> jnp.ndarray:
+    def a_eff(self, cfg: AnalogConfig, r_wire=None) -> jnp.ndarray:
         # same readout pipeline as CrossbarPair.a_eff (drift, then wire
-        # model); nonideal.wire_readout maps over the leading tile axes
+        # model, with the same traced r_wire override for calibration);
+        # nonideal.wire_readout maps over the leading tile axes
         ni = cfg.nonideal
-        gp = nonideal.wire_readout(nonideal.readout_conductance(self.gpos, ni), ni)
-        gn = nonideal.wire_readout(nonideal.readout_conductance(self.gneg, ni), ni)
+        gp = nonideal.wire_readout(
+            nonideal.readout_conductance(self.gpos, ni), ni, r_wire=r_wire)
+        gn = nonideal.wire_readout(
+            nonideal.readout_conductance(self.gneg, ni), ni, r_wire=r_wire)
         return (gp - gn) / self.g0
 
     def pair(self, idx) -> CrossbarPair:

@@ -594,13 +594,16 @@ def build_flat_plan(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
     return compile_plan(build_plan(a, key, cfg, stages))
 
 
-def _inv_operators(grid: TileGrid, cfg: AnalogConfig) -> jnp.ndarray:
+def _inv_operators(grid: TileGrid, cfg: AnalogConfig,
+                   r_wire=None) -> jnp.ndarray:
     """The (num, s, s) matrices one INV bucket's circuits solve with.
 
     Matches analog.amc_inv: effective conductance matrix plus the diagonal
-    summing-node loading term under finite OPA gain.
+    summing-node loading term under finite OPA gain.  `r_wire` optionally
+    overrides the static config wire resistance with a traced scalar (the
+    calibration path; see `finalize`).
     """
-    a = grid.a_eff(cfg)
+    a = grid.a_eff(cfg, r_wire=r_wire)
     if cfg.opa_gain is not None:
         load = (cfg.g0 + jnp.sum(grid.gpos + grid.gneg, axis=-1)) \
             / (cfg.opa_gain * cfg.g0)
@@ -763,12 +766,15 @@ class FinalizedPlan:
         return len(self.schedule)
 
 
-def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig) -> _MvmLevel:
+def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig,
+                        r_wire=None) -> _MvmLevel:
     """Precompute one "mvm" level's effective operators and divisors.
 
     Derivations match `execute_flat`'s runtime path exactly: per-tile
     `CrossbarPair.a_eff` (wire model folded in) and `amc_mvm_tiled`'s
     sequential summing-node load accumulation, evaluated once here.
+    `r_wire` optionally overrides the config wire resistance with a traced
+    scalar (see `finalize`).
     """
     groups: dict = {}        # (r, c) tile shape -> group index
     stacks: list = []        # per group: list of a_eff tiles
@@ -788,7 +794,7 @@ def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig) -> _MvmLevel:
                 windows.append([])
             g = groups[(r, c)]
             refs.append((g, len(stacks[g])))
-            stacks[g].append(pair.a_eff(cfg))
+            stacks[g].append(pair.a_eff(cfg, r_wire=r_wire))
             windows[g].append((col_off, col_off + c))
             load = load + jnp.sum(pair.gpos + pair.gneg, axis=1)
             col_off += c
@@ -799,21 +805,34 @@ def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig) -> _MvmLevel:
                      tuple(tuple(w) for w in windows), tuple(row_refs))
 
 
-def finalize(fplan: FlatPlan, cfg: AnalogConfig) -> FinalizedPlan:
+def finalize(fplan: FlatPlan, cfg: AnalogConfig,
+             r_wire=None) -> FinalizedPlan:
     """Precompute all per-solve-invariant operators of a flat plan.
 
     Traceable (pure jnp), so it can run under jit; typically called once per
     programmed matrix via `ProgrammedSolver.program`.
+
+    `r_wire` optionally overrides `cfg.nonideal.r_wire` with a *traced*
+    scalar, routed through the differentiable first-order wire model (the
+    static config keeps selecting everything else).  This is the
+    calibration hook (`repro.calib`): `finalize(fplan, cfg, r_wire=r_hat)`
+    -> `compile_arena` -> `execute_arena` is differentiable end-to-end in
+    `r_hat`, so planted wire parameters can be recovered by gradient
+    descent against the `repro.physics.nodal` oracle.  The override never
+    enters `plan_signature` - it changes array contents only, never shapes
+    or schedules.
     """
-    lu_stacks = tuple(jax.scipy.linalg.lu_factor(_inv_operators(g, cfg))
-                      for g in fplan.inv_stacks)
+    lu_stacks = tuple(
+        jax.scipy.linalg.lu_factor(_inv_operators(g, cfg, r_wire=r_wire))
+        for g in fplan.inv_stacks)
     mvm_levels = []
     schedule = []
     for instr in fplan.schedule:
         if instr[0] == "mvm":
             _, rows, src = instr
             schedule.append(("fmvm", len(mvm_levels), src))
-            mvm_levels.append(_finalize_mvm_level(fplan, rows, cfg))
+            mvm_levels.append(
+                _finalize_mvm_level(fplan, rows, cfg, r_wire=r_wire))
         else:
             schedule.append(instr)
     return FinalizedPlan(lu_stacks, tuple(mvm_levels), fplan.scale,
@@ -1269,6 +1288,108 @@ def _apply_level_jnp(vals, stacks, level):
                                                                    axis=0)
 
 
+# ---------------------------------------------------------------------------
+# Differentiable cascade core (implicit-diff VJP)
+#
+# The whole jnp-path cascade - input register to output gather - is one
+# `jax.custom_vjp` over (stacks, b_in) with the static metadata (levels,
+# out_spec) as nondiff arguments.  The primal replays `_apply_level_jnp` /
+# `_slot_gather` op for op, so wrapping it changes no forward bit; the
+# backward pass is a reverse sweep over the SAME programmed operator stacks
+# (each tile's adjoint is one transposed tile matmul), i.e. one more solve
+# against the resident plan - no re-factorisation, no re-programming, no
+# `lax.while_loop`.  Cotangents are produced for both the right-hand side
+# (the IFT adjoint solve) and the operator stacks (per-tile outer products,
+# the hook calibration loops differentiate through); when only the rhs
+# gradient is consumed, XLA dead-code-eliminates the stack outer products
+# under jit, so a backward costs ~1 forward arena solve (benchmarked in
+# artifacts/bench/grad.json).  Contract details: TESTING.md "differentiable
+# solver contract".
+# ---------------------------------------------------------------------------
+
+
+def _run_levels(levels, stacks, b_in):
+    vals = {0: b_in}
+    for level in levels:
+        _apply_level_jnp(vals, stacks, level)
+    return vals
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _cascade(levels, out_spec, stacks, b_in):
+    """The jnp cascade as a differentiable primitive: registers in slot-SSA
+    form, levels applied in schedule order, output gathered via `out_spec`.
+    `levels`/`out_spec` are the hashable static metadata of an ArenaPlan."""
+    return _slot_gather(_run_levels(levels, stacks, b_in), out_spec)
+
+
+def _cascade_fwd(levels, out_spec, stacks, b_in):
+    vals = _run_levels(levels, stacks, b_in)
+    out = _slot_gather(vals, out_spec)
+    # level i defines mreg i+1 (SSA), so vals is keyed 0..num_levels densely
+    return out, (stacks, tuple(vals[m] for m in range(len(vals))))
+
+
+def _scatter_ct(cot, vals, segments, u):
+    """Adjoint of `_slot_gather`: scatter-add the cotangent `u` back through
+    the signed static windows (sign per term, mirroring the gather)."""
+    for dst, seg_len, terms in segments:
+        piece = u[dst:dst + seg_len]
+        for m, off, sign in terms:
+            w = -piece if sign < 0 else piece
+            prev = cot.get(m)
+            if prev is None:
+                prev = jnp.zeros_like(vals[m])
+            cot[m] = prev.at[off:off + seg_len].add(w.astype(prev.dtype))
+
+
+def _cascade_bwd(levels, out_spec, res, g):
+    stacks, vals_t = res
+    vals = dict(enumerate(vals_t))
+    stack_bars = [jnp.zeros_like(s) for s in stacks]
+    cot = {}                                 # mreg -> cotangent register
+    _scatter_ct(cot, vals, out_spec, g)
+    for level in reversed(levels):
+        c = cot.pop(level[0][2], None)       # this level's output cotangent
+        if c is None:
+            continue                         # unread def: no contribution
+        if len(level) > 1 and len({t[0] for t in level}) == 1:
+            # mirror the forward shared-stack batched dot: one transposed
+            # batched matmul for the input adjoints, one batched outer
+            # product for the stack cotangents
+            sid, idxs = level[0][0], tuple(t[1] for t in level)
+            rows = stacks[sid].shape[-2]
+            cps = jnp.stack([c[t[3]:t[3] + rows] for t in level])
+            gathers = jnp.stack([_slot_gather(vals, t[5]) for t in level])
+            lo = idxs[0]
+            contiguous = idxs == tuple(range(lo, lo + len(idxs)))
+            ops_sel = (stacks[sid][lo:lo + len(idxs)] if contiguous
+                       else stacks[sid][jnp.asarray(idxs)])
+            ubars = jnp.swapaxes(ops_sel, -1, -2) @ cps      # (L, cols, k)
+            wbars = (cps @ jnp.swapaxes(gathers, -1, -2)
+                     ).astype(stacks[sid].dtype)             # (L, rows, cols)
+            stack_bars[sid] = (
+                stack_bars[sid].at[lo:lo + len(idxs)].add(wbars) if contiguous
+                else stack_bars[sid].at[jnp.asarray(idxs)].add(wbars))
+            for pos, t in enumerate(level):
+                _scatter_ct(cot, vals, t[5], ubars[pos])
+        else:
+            for sid, idx, _, out_local, _, segments in level:
+                rows = stacks[sid].shape[-2]
+                cp = c[out_local:out_local + rows]
+                gat = _slot_gather(vals, segments)
+                stack_bars[sid] = stack_bars[sid].at[idx].add(
+                    (cp @ gat.T).astype(stacks[sid].dtype))
+                _scatter_ct(cot, vals, segments, stacks[sid][idx].T @ cp)
+    b_bar = cot.get(0)
+    if b_bar is None:
+        b_bar = jnp.zeros_like(vals[0])
+    return tuple(stack_bars), b_bar
+
+
+_cascade.defvjp(_cascade_fwd, _cascade_bwd)
+
+
 def _apply_level_kernel(arena, ap, level, interpret):
     """One schedule level on the physical arena via the Pallas megakernel.
 
@@ -1347,10 +1468,9 @@ def execute_arena(ap: ArenaPlan, b: jnp.ndarray,
         out = _slot_gather({0: arena},
                            _arena_out_spec(ap.out_spec, ap.slot_offsets))
     else:
-        vals = {0: b_in}
-        for level in ap.levels:
-            _apply_level_jnp(vals, ap.stacks, level)
-        out = _slot_gather(vals, ap.out_spec)
+        # the differentiable cascade core: identical ops to the plain level
+        # loop (bit-compatible), plus the implicit-diff VJP for jax.grad
+        out = _cascade(ap.levels, ap.out_spec, ap.stacks, b_in)
     if single:
         out = out[:, 0]
     return -ap.scale * analog.adc(out, cfg)
@@ -1764,10 +1884,8 @@ def execute_arena_packed(pp: PackedArenaPlan, bs: jnp.ndarray,
         out = jax.vmap(lambda ar: _slot_gather({0: ar}, out_spec))(arena)
     else:
         def one(stacks, b1):
-            vals = {0: b1}
-            for level in pp.levels:
-                _apply_level_jnp(vals, stacks, level)
-            return _slot_gather(vals, pp.out_spec)
+            # per-instance differentiable cascade (custom_vjp vmaps cleanly)
+            return _cascade(pp.levels, pp.out_spec, stacks, b1)
 
         out = jax.vmap(one)(pp.stacks, b_in)
     if single:

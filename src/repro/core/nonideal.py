@@ -65,8 +65,12 @@ def effective_conductance(g: jnp.ndarray, r_seg: float) -> jnp.ndarray:
 
     Exact to O((r G n)^2); validated against the exact MNA oracle in tests.
     Cost is two n x n matmuls - free at crossbar sizes.
+
+    `r_seg` may be a traced scalar (the model is linear in r_seg, so it is
+    differentiable - the calibration path); the zero-resistance early-out
+    only fires for static Python zeros.
     """
-    if r_seg == 0.0:
+    if isinstance(r_seg, (int, float)) and r_seg == 0.0:
         return g
     n_rows, n_cols = g.shape
     dtype = g.dtype
@@ -338,8 +342,19 @@ def readout_conductance(g: jnp.ndarray, ni: NonidealConfig) -> jnp.ndarray:
     return g * (ni.drift_t ** (-ni.drift_nu))
 
 
-def wire_readout(g: jnp.ndarray, ni: NonidealConfig) -> jnp.ndarray:
-    """Dispatch the configured wire model over a (..., r, c) stack."""
+def wire_readout(g: jnp.ndarray, ni: NonidealConfig,
+                 r_wire=None) -> jnp.ndarray:
+    """Dispatch the configured wire model over a (..., r, c) stack.
+
+    `r_wire` optionally overrides `ni.r_wire` with a *traced* scalar: the
+    override always routes through the differentiable first-order model,
+    regardless of `ni.wire_model` / `ni.r_wire` gating (the calibration
+    loops in `repro.calib` differentiate solver outputs with respect to
+    it; the exact "nodal" model needs a static r_seg and stays the
+    non-differentiable oracle).
+    """
+    if r_wire is not None:
+        return _over_tiles(partial(effective_conductance, r_seg=r_wire), g)
     if ni.r_wire <= 0.0 or ni.wire_model == "none":
         return g
     if ni.wire_model == "first_order":

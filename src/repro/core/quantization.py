@@ -6,23 +6,48 @@ include 8-bit-class converters).  The circuit model (core/analog.py), the
 Pallas kernel (kernels/crossbar_mvm.py - the function is traced inside the
 kernel body, so it must stay pure jnp) and the jnp oracles (kernels/ref.py)
 all import this one definition; a parity test pins them together.
+
+Autodiff: the rounding step is piecewise constant (zero gradient almost
+everywhere), which would silently kill every gradient that crosses a
+converter.  `quantize` therefore carries a straight-through estimator
+(TESTING.md "differentiable solver contract"): the JVP passes the tangent
+through unchanged inside the converter's full-scale range and zeroes it in
+the clipped region - the gradient of the clip, with the rounding treated as
+identity.  The primal value is bit-identical to the plain computation.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(1, 2))
+def _quantize_ste(v: jnp.ndarray, bits: int, fullscale: float) -> jnp.ndarray:
+    levels = 2 ** bits - 1
+    step = 2.0 * fullscale / levels
+    v = jnp.clip(v, -fullscale, fullscale)
+    return jnp.round(v / step) * step
+
+
+@_quantize_ste.defjvp
+def _quantize_ste_jvp(bits, fullscale, primals, tangents):
+    (v,), (dv,) = primals, tangents
+    out = _quantize_ste(v, bits, fullscale)
+    # straight-through: d(round(clip(v)))/dv ~ d(clip(v))/dv
+    inside = (jnp.abs(v) <= fullscale).astype(dv.dtype)
+    return out, dv * inside
 
 
 def quantize(v: jnp.ndarray, bits: Optional[int],
              fullscale: float) -> jnp.ndarray:
     """Uniform mid-rise quantiser over [-fullscale, +fullscale]; clips.
 
-    bits=None models an ideal converter (identity).
+    bits=None models an ideal converter (identity).  Differentiable via a
+    straight-through estimator (see module docstring).
     """
     if bits is None:
         return v
-    levels = 2 ** bits - 1
-    step = 2.0 * fullscale / levels
-    v = jnp.clip(v, -fullscale, fullscale)
-    return jnp.round(v / step) * step
+    return _quantize_ste(v, bits, fullscale)

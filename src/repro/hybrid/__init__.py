@@ -24,7 +24,8 @@ hybrid digital-analog approximate-inverse preconditioning):
 """
 from repro.hybrid.classic import (  # noqa: F401
     cg_refine, iterations_to_tol, richardson_refine)
-from repro.hybrid.krylov import KrylovResult, gmres, pcg  # noqa: F401
+from repro.hybrid.krylov import (  # noqa: F401
+    KrylovResult, gmres, pcg, pcg_fixed)
 from repro.hybrid.operators import (  # noqa: F401
     AnalogPreconditioner, matvec_from_dense)
 from repro.hybrid.refine import (  # noqa: F401

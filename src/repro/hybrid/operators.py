@@ -54,6 +54,18 @@ class AnalogPreconditioner:
     runs the arena-form single-dispatch executor (core/blockamc.py DESIGN
     note) - the serving fast path - and "reference" the finalized schedule
     it is float-tolerance-pinned against (TESTING.md four-way contract).
+
+    Differentiability (TESTING.md "differentiable solver contract"): the
+    apply is reverse-mode differentiable in both the input `v` and the
+    plan's *array* leaves (effective-operator stacks, scale) - the fused
+    path routes through the arena executor's implicit-diff `custom_vjp`,
+    so the backward pass is one transposed cascade, never a re-programming.
+    The pytree split is load-bearing for that: `tree_flatten` keeps every
+    calibratable array in the children and only static metadata (`mode`,
+    and the plans' hashable level/spec tuples inside their own flattening)
+    in aux_data, so `jax.grad`/`jax.vmap` see exactly the differentiable
+    leaves and jit caches never retrace on a re-programmed instance
+    (pinned by the retrace-guard tests in tests/test_autodiff.py).
     """
 
     def __init__(self, fin: FinalizedPlan,

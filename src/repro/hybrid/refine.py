@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import blockamc
 from repro.core.analog import AnalogConfig
@@ -35,12 +36,25 @@ from repro.hybrid.krylov import KrylovResult, gmres, pcg
 from repro.hybrid.operators import AnalogPreconditioner, matvec_from_dense
 
 
-def _refine(a: jnp.ndarray, bt: jnp.ndarray, precond: AnalogPreconditioner,
-            method: str, tol: float, maxiter: int, restart: int,
-            use_precond: bool) -> KrylovResult:
+def _sanitize_seed(x0: jnp.ndarray) -> jnp.ndarray:
+    """Per-column seed guard: a faulted crossbar emits non-finite analog
+    seeds (stuck-at arrays can make the programmed inverse singular), and a
+    single NaN in `x0` would poison the whole Krylov recurrence for that
+    column.  Any column with a non-finite entry degrades to the zero seed -
+    the digital iteration then simply starts cold, instead of answering
+    NaN (one poisoned tenant must not poison its own refinement, let alone
+    a batch-mate's; regression-pinned in tests/test_autodiff.py)."""
+    finite = jnp.all(jnp.isfinite(x0), axis=-1, keepdims=True)
+    return jnp.where(finite, x0, jnp.zeros_like(x0))
+
+
+def _refine_core(a: jnp.ndarray, bt: jnp.ndarray,
+                 precond: AnalogPreconditioner, method: str, tol: float,
+                 maxiter: int, restart: int,
+                 use_precond: bool) -> KrylovResult:
     """Core driver on leading-axis right-hand sides bt: (..., n)."""
     matvec = matvec_from_dense(a)
-    x0 = precond(bt)                       # the analog seed, one solve
+    x0 = _sanitize_seed(precond(bt))       # the analog seed, one solve
     mv_m = precond if use_precond else None
     if method == "cg":
         return pcg(matvec, bt, precond=mv_m, x0=x0, tol=tol, maxiter=maxiter)
@@ -48,6 +62,58 @@ def _refine(a: jnp.ndarray, bt: jnp.ndarray, precond: AnalogPreconditioner,
         return gmres(matvec, bt, precond=mv_m, x0=x0, tol=tol,
                      restart=restart, maxiter=maxiter)
     raise ValueError(f"unknown method {method!r} (want 'cg' or 'gmres')")
+
+
+# --- implicit-function-theorem VJP around the refined solve ----------------
+#
+# The Krylov drivers iterate inside `lax.while_loop`, which JAX cannot
+# reverse-differentiate - and unrolling hundreds of CG steps would be the
+# wrong gradient anyway (noisy, memory-hungry).  At convergence the output
+# satisfies A x = b independently of the iteration path, so the implicit
+# function theorem gives the exact adjoint:
+#
+#     lambda = A^-T gx,   b_bar = lambda,   A_bar = -sum_cols lambda x^T,
+#
+# i.e. the backward pass is ONE more (digital, seed-less) solve against the
+# transposed system with the same method and fuel.  Only `x` carries
+# gradients: the diagnostic fields (iters/resnorm/converged) and the analog
+# preconditioner's arrays are treated as non-differentiable constants (the
+# preconditioner changes the path, never the fixed point).  Second-order
+# differentiation is out of contract (TESTING.md "differentiable solver
+# contract").
+
+def _zero_ct(leaf):
+    """A zero cotangent of `leaf`'s dtype (float0 for int/bool leaves, as
+    custom_vjp requires for non-differentiable primal inputs)."""
+    if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+        return jnp.zeros_like(leaf)
+    return np.zeros(jnp.shape(leaf), dtype=jax.dtypes.float0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _refine(a, bt, precond, method, tol, maxiter, restart, use_precond):
+    return _refine_core(a, bt, precond, method, tol, maxiter, restart,
+                        use_precond)
+
+
+def _refine_fwd(a, bt, precond, method, tol, maxiter, restart, use_precond):
+    res = _refine_core(a, bt, precond, method, tol, maxiter, restart,
+                       use_precond)
+    return res, (a, precond, res.x)
+
+
+def _refine_bwd(method, tol, maxiter, restart, use_precond, saved, ct):
+    a, precond, x = saved
+    gx = ct.x                      # cotangents of the diagnostics are unused
+    at = jnp.swapaxes(a, -1, -2)   # cg implies A SPD, but stay exact
+    lam = _fallback(at, gx, method, tol, maxiter, restart).x
+    n = a.shape[-1]
+    a_bar = -(lam.reshape(-1, n).T @ x.reshape(-1, n)).astype(a.dtype)
+    return (a_bar, lam.astype(gx.dtype),
+            jax.tree_util.tree_map(_zero_ct, precond))
+
+
+_refine.defvjp(_refine_fwd, _refine_bwd)
 
 
 @partial(jax.jit, static_argnames=("method", "tol", "maxiter", "restart",

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from repro.core import blockamc
 from repro.core.analog import AnalogConfig
 from repro.core.distributed import block_inv
-from repro.hybrid import AnalogPreconditioner, matvec_from_dense, pcg
+from repro.hybrid import AnalogPreconditioner, matvec_from_dense, pcg_fixed
 
 
 class PrecondState(NamedTuple):
@@ -99,14 +99,16 @@ class BlockAMCPrecond:
         # analog path: program the matrix once, then run one batched CG over
         # all n identity columns (leading-axis multi-RHS) seeded by the
         # fused analog solve; analog_precond=True additionally applies the
-        # programmed cascade inside the iteration.  tol=0 spends exactly
-        # refine_iters iterations per column - the fixed digital budget.
+        # programmed cascade inside the iteration.  `pcg_fixed` spends
+        # exactly refine_iters iterations per column - the fixed digital
+        # budget - and, being a `lax.scan`, keeps this whole preconditioner
+        # reverse-mode differentiable (pcg's while_loop is not).
         solver = blockamc.ProgrammedSolver.program(a, key, self.analog_cfg)
         precond = AnalogPreconditioner.from_solver(solver)
         eye = jnp.eye(a.shape[0], dtype=jnp.float32)
-        res = pcg(matvec_from_dense(a), eye,
-                  precond=precond if self.analog_precond else None,
-                  x0=precond(eye), tol=0.0, maxiter=self.refine_iters)
+        res = pcg_fixed(matvec_from_dense(a), eye,
+                        precond=precond if self.analog_precond else None,
+                        x0=precond(eye), iters=self.refine_iters)
         return res.x.T    # row i solves A x = e_i -> column i of A^-1
 
     def _invert(self, gram: jnp.ndarray, key) -> jnp.ndarray:
