@@ -1,0 +1,202 @@
+"""Replicated-fleet benchmark: open-loop Poisson traffic through the
+router, replica-loss recovery with and without checkpoint restore.
+
+Open-loop (pre-generated Poisson arrivals, like engine_bench) so baseline
+and chaos runs see byte-identical traffic.  Three scenarios share one
+trace:
+
+* baseline        - N replicas, no chaos: routing + hedging overhead over
+                    a single engine is the p50/p99 story.
+* death_restore   - r0's worker dies mid-stream (scripted `ReplicaDeath`);
+                    the replacement restores programmed state from the
+                    `ProgramStore` checkpoint.
+* death_reprogram - same death, but every checkpoint was value-corrupted
+                    after programming: the canary rejects each restore and
+                    recovery pays full write-verify re-programming.
+
+The headline number is `recovery_ratio` = re-program recovery time /
+restore recovery time - the factor the durable-checkpoint path buys,
+the ISSUE acceptance metric (artifacts/bench/router.json).  Recovery
+time per scenario is the summed per-matrix state-rebuild time on the
+replacement replica (`FleetStats.restore_s` / `reprogram_s`).
+
+All keys are report-only for the nightly diff_bench (latencies `_ms`,
+rates `_rps`/`_rate`, the ratio): serving tails and programming times on
+shared CI boxes are too noisy to gate at +-25%.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, save_json
+from repro.checkpoint import ProgramStore
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+from repro.runtime import ChaosInjector, ReplicaDeath
+from repro.serve import ReplicatedSolverFleet, SolverService
+
+SMOKE = False
+
+
+def _percentile_ms(lat_s, q):
+    return float(np.percentile(np.asarray(lat_s) * 1e3, q)) if len(lat_s) \
+        else 0.0
+
+
+def run_traffic(*, n, m, n_replicas, rate_hz, n_requests, deadline_s,
+                chaos_events=(), damage=None, seed=0):
+    """One open-loop run through a fresh fleet; returns the metrics dict.
+
+    `damage(store)` runs after programming (checkpoints saved) and before
+    traffic - the hook the corruption scenario uses.
+    """
+    cfg = AnalogConfig(array_size=max(n // 2, 4),
+                       nonideal=NonidealConfig(sigma=0.02))
+    chaos = ChaosInjector(list(chaos_events)) if chaos_events else None
+    store_dir = tempfile.mkdtemp(prefix="router_bench_store_")
+    store = ProgramStore(store_dir)
+    fleet = ReplicatedSolverFleet(
+        lambda: SolverService(cfg, stages=1), n_replicas,
+        engine_kw=dict(max_batch=8, flush_interval=0.01, max_pending=512,
+                       retries=2, backoff=0.0),
+        store=store, chaos=chaos)
+
+    key = jax.random.PRNGKey(seed)
+    # pre-generate the whole trace: identical traffic across scenarios
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    tenants = rng.integers(0, m, n_requests)
+    rhs = [np.asarray(random_rhs(jax.random.fold_in(key, 500 + i), n))
+           for i in range(n_requests)]
+
+    try:
+        with fleet:
+            for i in range(m):
+                fleet.program("b%d" % i,
+                              wishart(jax.random.fold_in(key, i), n),
+                              jax.random.fold_in(key, 100 + i))
+            if damage is not None:
+                damage(store)
+
+            futs = []
+            t0 = time.perf_counter()
+            for i in range(n_requests):
+                lag = arrivals[i] - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+                futs.append(fleet.submit("b%d" % tenants[i], rhs[i],
+                                         deadline_s=deadline_s))
+            results, typed_errors = [], 0
+            for f in futs:
+                try:
+                    results.append(f.result(timeout=600))
+                except Exception:                  # noqa: BLE001
+                    typed_errors += 1  # typed fleet error, never a hang
+            wall = time.perf_counter() - t0
+            if chaos is not None:
+                # recovery completes asynchronously; bound the wait
+                t_end = time.monotonic() + 60.0
+                while (fleet.stats.replacements < 1
+                       and time.monotonic() < t_end):
+                    time.sleep(0.02)
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
+
+    lat = [r.latency_s for r in results]
+    in_slo = sum(1 for r in results if not r.deadline_missed)
+    st = fleet.stats
+    recovery_ms = 1e3 * (sum(st.restore_s) if st.restores
+                         else sum(st.reprogram_s))
+    return {
+        "requests": n_requests,
+        "answered": len(results),
+        "typed_errors": typed_errors,
+        "p50_ms": _percentile_ms(lat, 50),
+        "p99_ms": _percentile_ms(lat, 99),
+        "wall_ms": wall * 1e3,
+        "offered_rps": n_requests / wall,
+        "goodput_rps": in_slo / wall,
+        "miss_rate": (sum(1 for r in results if r.deadline_missed)
+                      / len(results)) if results else 0.0,
+        "hedges": st.hedges,
+        "replays": st.replays,
+        "deaths": st.deaths,
+        "replacements": st.replacements,
+        "restores": st.restores,
+        "reprogram_fallbacks": st.reprogram_fallbacks,
+        "rejected_checkpoints": st.rejected_checkpoints,
+        "restore_ms": [s * 1e3 for s in st.restore_s],
+        "reprogram_ms": [s * 1e3 for s in st.reprogram_s],
+        "recovery_ms": recovery_ms,
+        "chaos_log": ([(i, type(e).__name__) for i, e in chaos.log]
+                      if chaos else []),
+    }
+
+
+def main():
+    if SMOKE:
+        n, m, n_replicas, n_requests, rate_hz = 16, 2, 2, 40, 100.0
+    else:
+        n, m, n_replicas, n_requests, rate_hz = 32, 4, 3, 160, 150.0
+    deadline_s = 5.0
+    death = (ReplicaDeath(at_dispatch=2, replica="r0"),)
+
+    out = {"params": {"n": n, "tenants": m, "replicas": n_replicas,
+                      "requests": n_requests, "rate_hz": rate_hz,
+                      "deadline_sec": deadline_s, "smoke": SMOKE}}
+
+    base = run_traffic(n=n, m=m, n_replicas=n_replicas, rate_hz=rate_hz,
+                       n_requests=n_requests, deadline_s=deadline_s)
+    out["baseline"] = base
+    csv_row("router_baseline_r%d_m%d_n%d" % (n_replicas, m, n), 0.0,
+            "p50_ms=%.1f p99_ms=%.1f goodput=%.0f/s miss=%.3f" %
+            (base["p50_ms"], base["p99_ms"], base["goodput_rps"],
+             base["miss_rate"]))
+
+    restore = run_traffic(n=n, m=m, n_replicas=n_replicas, rate_hz=rate_hz,
+                          n_requests=n_requests, deadline_s=deadline_s,
+                          chaos_events=death)
+    out["death_restore"] = restore
+    csv_row("router_death_restore_r%d_m%d_n%d" % (n_replicas, m, n), 0.0,
+            "p99_ms=%.1f replays=%d restores=%d recovery_ms=%.1f" %
+            (restore["p99_ms"], restore["replays"], restore["restores"],
+             restore["recovery_ms"]))
+
+    reprog = run_traffic(
+        n=n, m=m, n_replicas=n_replicas, rate_hz=rate_hz,
+        n_requests=n_requests, deadline_s=deadline_s, chaos_events=death,
+        damage=lambda store: [store.corrupt(mid, "values")
+                              for mid in store.matrix_ids()])
+    out["death_reprogram"] = reprog
+    csv_row("router_death_reprogram_r%d_m%d_n%d" % (n_replicas, m, n), 0.0,
+            "p99_ms=%.1f rejected=%d reprograms=%d recovery_ms=%.1f" %
+            (reprog["p99_ms"], reprog["rejected_checkpoints"],
+             reprog["reprogram_fallbacks"], reprog["recovery_ms"]))
+
+    ratio = (reprog["recovery_ms"] / restore["recovery_ms"]
+             if restore["recovery_ms"] > 0 else float("nan"))
+    out["recovery_ratio"] = ratio
+    csv_row("router_recovery_ratio", 0.0,
+            "reprogram_over_restore=%.1fx (restore=%.1fms reprogram=%.1fms)"
+            % (ratio, restore["recovery_ms"], reprog["recovery_ms"]))
+    save_json("router", out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 2 replicas, 2 tenants, ~40 requests")
+    if ap.parse_args().smoke:
+        SMOKE = True
+    main()

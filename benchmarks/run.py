@@ -14,6 +14,8 @@ artifacts/bench/ consumed by EXPERIMENTS.md.
   hybrid, distributed, kernels - beyond-figure system benchmarks
   engine - serving-engine SLOs under open-loop Poisson traffic, with and
            without a scripted chaos schedule (report-only keys)
+  router - replicated-fleet SLOs + replica-loss recovery: checkpoint
+           restore vs full re-programming (report-only keys)
   grad   - differentiable solver: backward-vs-forward marginal cost of the
            implicit-diff VJP + wire-calibration convergence curve
 
@@ -32,7 +34,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (common, distributed_solver, engine_bench,
                         fig6_accuracy, fig7_variation, fig8_twostage,
                         fig9_interconnect, fig10_area_power, grad_bench,
-                        hybrid_refinement, kernel_bench)
+                        hybrid_refinement, kernel_bench, router_bench)
 
 
 def main() -> None:
@@ -87,6 +89,7 @@ def main() -> None:
         hybrid_refinement.SMOKE = True
         engine_bench.SMOKE = True
         grad_bench.SMOKE = True
+        router_bench.SMOKE = True
         common.N_SIMS_PAPER = 4
         common.SIZES_PAPER = (8, 16, 32, 64)
         fig7_variation.N_SIMS_PAPER = 4
@@ -111,6 +114,7 @@ def main() -> None:
         "kernels": kernel_bench.main,
         "engine": engine_bench.main,
         "grad": grad_bench.main,
+        "router": router_bench.main,
     }
     # fig9_oracle is opt-in (--only): the exact-MNA sweep at n >= 64 is a
     # nightly artifact, too heavy for the default minutes-long suite.

@@ -13,7 +13,7 @@ import jax
 from repro.configs import get_config
 from repro.launch.train import host_scale_config
 from repro.models import transformer as tr
-from repro.serve.engine import Engine
+from repro.models.lm_engine import Engine
 
 
 def main():

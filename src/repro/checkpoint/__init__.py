@@ -1,2 +1,5 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
-    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)
+    CheckpointCorruptionError, CheckpointError, CheckpointManager,
+    latest_step, load_manifest, restore_checkpoint, save_checkpoint)
+from repro.checkpoint.program_store import (  # noqa: F401
+    CheckpointRejectedError, ProgramStore, StaleCheckpointError)

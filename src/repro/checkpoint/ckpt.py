@@ -7,6 +7,16 @@ latest checkpoint - and restore validates the manifest before loading.
 `restore_checkpoint(..., sharding_tree=...)` re-device_puts each leaf with
 the *target* sharding, which is what makes elastic re-meshing (restore onto
 a different mesh shape) a pure restart-path operation.
+
+Leaf keys are `jax.tree_util.keystr` path strings, which distinguish a
+dict key from a sequence index (`['0']` vs `[0]`) - the historical
+str()-joined keys collapsed the two, so a checkpoint saved from a
+list-shaped tree could silently restore into a dict-shaped one.  Files
+are named by flatten order (`leaf_00000.npy`), with the manifest carrying
+the key -> file map; restore cross-checks every loaded array against the
+manifest's recorded shape/dtype and raises `CheckpointCorruptionError`
+on any disagreement (a truncated or tampered leaf must never be silently
+cast into the target structure).
 """
 from __future__ import annotations
 
@@ -22,18 +32,27 @@ import numpy as np
 MANIFEST = "MANIFEST.json"
 
 
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint-layer failures."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A leaf file disagrees with its manifest entry (shape/dtype/missing)."""
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        out[key] = leaf
-    return out
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
-    """Blocking atomic save.  Returns the final checkpoint path."""
+def save_checkpoint(directory: str, step: int, tree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Blocking atomic save.  Returns the final checkpoint path.
+
+    `extra` is an optional JSON-serializable dict stored verbatim in the
+    manifest under "extra" - validation metadata (programming signatures,
+    calibration thresholds) rides along with the arrays it describes.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -41,10 +60,12 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(tree)
-    manifest = {"step": step, "leaves": {}}
-    for key, leaf in flat.items():
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    if extra is not None:
+        manifest["extra"] = extra
+    for i, (key, leaf) in enumerate(flat.items()):
         arr = np.asarray(jax.device_get(leaf))
-        fname = key.replace("/", "__") + ".npy"
+        fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"][key] = {
             "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
@@ -54,6 +75,13 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def load_manifest(directory: str, step: int) -> Dict[str, Any]:
+    """The raw manifest dict of one checkpoint (metadata-only read)."""
+    path = os.path.join(directory, f"step_{step:08d}", MANIFEST)
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -86,7 +114,19 @@ def restore_checkpoint(directory: str, step: int, tree_like,
         meta = leaves_meta.get(key)
         if meta is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = np.load(os.path.join(path, meta["file"]))
+        fpath = os.path.join(path, meta["file"])
+        try:
+            arr = np.load(fpath)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"leaf {key!r}: cannot load {meta['file']}: {e}") from e
+        if list(arr.shape) != list(meta["shape"]) or \
+                str(arr.dtype) != meta["dtype"]:
+            raise CheckpointCorruptionError(
+                f"leaf {key!r}: file {meta['file']} is "
+                f"{arr.dtype}{list(arr.shape)} but manifest recorded "
+                f"{meta['dtype']}{meta['shape']}")
+        like = np.asarray(like)
         if list(arr.shape) != list(like.shape):
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs {like.shape}")
@@ -97,8 +137,7 @@ def restore_checkpoint(directory: str, step: int, tree_like,
             restored[key] = jax.numpy.asarray(arr)
     # rebuild the tree in tree_like's structure
     paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
-    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                     for p in path) for path, _ in paths]
+    keys = [jax.tree_util.keystr(p) for p, _ in paths]
     return jax.tree_util.tree_unflatten(treedef, [restored[k] for k in keys])
 
 

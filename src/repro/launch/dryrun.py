@@ -38,7 +38,7 @@ from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tr
 from repro.optim.adamw import AdamW
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.models.serve_step import make_decode_step, make_prefill_step
 from repro.sharding import api as shapi
 from repro.sharding import partition
 from repro.train.train_step import init_train_state, make_train_step

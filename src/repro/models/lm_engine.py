@@ -1,7 +1,12 @@
-"""Batched generation engine: prefill once, decode in a jitted scan loop.
+"""Batched LM generation engine: prefill once, decode in a jitted scan loop.
 
 A deliberately small but production-shaped engine: static batch slots,
 greedy or temperature sampling, per-request stop handling, cache reuse.
+
+Lives under `models/` with the transformer it serves: `repro.serve` is
+the *solver* serving namespace (SolverService / AsyncSolverEngine /
+ReplicatedSolverFleet), and this class's old `serve.Engine` name collided
+with it.
 """
 from __future__ import annotations
 
@@ -13,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tr
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.models.serve_step import make_decode_step, make_prefill_step
 
 
 @dataclasses.dataclass

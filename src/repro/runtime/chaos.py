@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.nonideal import NonidealConfig
 
@@ -41,11 +41,29 @@ class ScriptedDispatchError(RuntimeError):
     """A chaos-scripted transient dispatch failure (retriable)."""
 
 
+class ReplicaDeathError(BaseException):
+    """A chaos-scripted replica worker-thread death.
+
+    Deliberately *not* a RuntimeError (nor even an Exception): it must
+    sail past `retry_step`'s retriable filter and the engine's dispatch
+    containment the same way a segfaulting driver or an OOM kill would -
+    nothing inside the replica is allowed to catch and survive it.  The
+    worker thread dies with queued and in-flight futures unresolved;
+    resolving them is the *fleet's* job (replay on survivors), which is
+    exactly the contract under test.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class DispatchException:
-    """Raise `ScriptedDispatchError` inside dispatch attempt `at_dispatch`."""
+    """Raise `ScriptedDispatchError` inside dispatch attempt `at_dispatch`.
+
+    `replica=None` matches any replica; a name scopes the event to one
+    engine's dispatch counter in a fleet run.
+    """
     at_dispatch: int
     message: str = "chaos: scripted dispatch failure"
+    replica: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +71,49 @@ class DispatchLatency:
     """Sleep `seconds` inside dispatch attempt `at_dispatch` (straggler)."""
     at_dispatch: int
     seconds: float
+    replica: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaDeath:
+    """Kill `replica`'s worker thread at dispatch attempt `at_dispatch`.
+
+    Raises `ReplicaDeathError` inside the dispatch, which propagates
+    through every containment layer and terminates the worker loop with
+    its queues intact - the closest software analog of a hard device
+    loss.
+    """
+    at_dispatch: int
+    replica: Optional[str] = None
+    message: str = "chaos: replica worker death"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaStall:
+    """Sustained stall: `replica` sleeps `seconds` on *every* dispatch
+    from `at_dispatch` through `until_dispatch` (inclusive) - a replica
+    that is alive but useless, the gray-failure case the health score
+    (not liveness) must catch.  Unlike one-shot events this stays armed
+    across the window.
+    """
+    at_dispatch: int
+    seconds: float
+    until_dispatch: int = 1 << 62
+    replica: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCorruption:
+    """Damage `matrix_id`'s stored programmed state at `at_dispatch`.
+
+    The fleet applies it via `ProgramStore.corrupt(matrix_id, how)`;
+    how="values" survives the integrity check and must be caught by the
+    physics canary, how="truncate" by the manifest cross-check.
+    """
+    at_dispatch: int
+    matrix_id: str
+    how: str = "values"
+    replica: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +133,13 @@ class DeviceFault:
     persistent: bool = False
 
 
-ChaosEvent = Union[DispatchException, DispatchLatency, DeviceFault]
+ChaosEvent = Union[DispatchException, DispatchLatency, DeviceFault,
+                   ReplicaDeath, ReplicaStall, CheckpointCorruption]
+
+
+def _matches(e, replica: Optional[str]) -> bool:
+    scope = getattr(e, "replica", None)
+    return scope is None or scope == replica
 
 
 class ChaosInjector:
@@ -99,30 +166,65 @@ class ChaosInjector:
         self._fired: set = set()
         self._persistent: Dict[str, NonidealConfig] = {}
 
-    def _due(self, idx: int, kind) -> List[ChaosEvent]:
+    def _due(self, idx: int, kind,
+             replica: Optional[str] = None) -> List[ChaosEvent]:
         due = []
         for i, e in enumerate(self.events):
             if i in self._fired or not isinstance(e, kind):
                 continue
-            if idx >= e.at_dispatch:
+            if idx >= e.at_dispatch and _matches(e, replica):
                 self._fired.add(i)
                 self.log.append((idx, e))
                 due.append(e)
         return due
 
-    def faults_due(self, idx: int) -> List[DeviceFault]:
+    def faults_due(self, idx: int,
+                   replica: Optional[str] = None) -> List[DeviceFault]:
         """Device faults to apply before dispatch cycle `idx` (fire once)."""
-        due = self._due(idx, DeviceFault)
+        due = self._due(idx, DeviceFault, replica)
         for e in due:
             if e.persistent:
                 self._persistent[e.matrix_id] = e.nonideal
         return due
 
-    def on_dispatch(self, idx: int) -> None:
-        """Latency first (a straggler can also fail), then exceptions."""
-        for e in self._due(idx, DispatchLatency):
+    def corruptions_due(self, idx: int,
+                        replica: Optional[str] = None
+                        ) -> List[CheckpointCorruption]:
+        """Checkpoint-corruption events due at `idx` (fire once); the
+        fleet applies them to its ProgramStore."""
+        return self._due(idx, CheckpointCorruption, replica)
+
+    def _stalls_due(self, idx: int,
+                    replica: Optional[str]) -> List[ReplicaStall]:
+        """Window events: armed on every dispatch inside the window, logged
+        only on first firing, retired (fired-once) past the window end."""
+        due = []
+        for i, e in enumerate(self.events):
+            if i in self._fired or not isinstance(e, ReplicaStall):
+                continue
+            if not _matches(e, replica):
+                continue
+            if idx > e.until_dispatch:
+                self._fired.add(i)
+                continue
+            if idx >= e.at_dispatch:
+                if (i, "logged") not in self._fired:
+                    self._fired.add((i, "logged"))
+                    self.log.append((idx, e))
+                due.append(e)
+        return due
+
+    def on_dispatch(self, idx: int, replica: Optional[str] = None) -> None:
+        """Latency first (a straggler can also fail), then stalls, then
+        deaths, then exceptions.  `replica` scopes the lookup in fleet
+        runs; replica-agnostic events (replica=None) always match."""
+        for e in self._due(idx, DispatchLatency, replica):
             self.sleep(e.seconds)
-        for e in self._due(idx, DispatchException):
+        for e in self._stalls_due(idx, replica):
+            self.sleep(e.seconds)
+        for e in self._due(idx, ReplicaDeath, replica):
+            raise ReplicaDeathError(e.message)
+        for e in self._due(idx, DispatchException, replica):
             raise ScriptedDispatchError(e.message)
 
     def reprogram_nonideal(self, matrix_id: str,

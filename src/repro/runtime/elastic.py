@@ -40,3 +40,18 @@ class ElasticMesh:
         import numpy as np
         arr = np.asarray(devices[:data * model]).reshape(data, model)
         return Mesh(arr, ("data", "model"))
+
+    def assign_replicas(self, n_replicas: int,
+                        devices: Optional[List] = None) -> List:
+        """One device per serving replica, round-robin over the pool.
+
+        With fewer devices than replicas the pool wraps (CPU test runs:
+        every replica shares device 0); with more, replicas land on
+        distinct devices and the remainder stays free for elasticity.
+        Placement is deterministic in (n_replicas, pool order) so fleet
+        chaos runs are replayable.
+        """
+        devices = devices if devices is not None else jax.devices()
+        if not devices:
+            raise ValueError("no devices to place replicas on")
+        return [devices[i % len(devices)] for i in range(n_replicas)]

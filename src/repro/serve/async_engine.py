@@ -49,6 +49,7 @@ tests and the `benchmarks/engine_bench.py` chaos smoke.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import threading
@@ -60,6 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.program_store import CheckpointRejectedError
+from repro.runtime.chaos import ReplicaDeathError
 from repro.runtime.fault_tolerance import StepWatchdog, retry_step
 
 log = logging.getLogger("repro.serve.async_engine")
@@ -125,6 +128,7 @@ class EngineStats:
     degraded: int = 0          # matrices that ended up on the digital path
     replays: int = 0           # requests replayed after a quarantine
     fallback_rhs: int = 0      # rhs answered by the digital fallback
+    cancelled: int = 0         # requests cancelled while still queued
     recovery_s: List[float] = dataclasses.field(default_factory=list)
 
 
@@ -143,7 +147,8 @@ class _Request:
 
 class _MatrixState:
     __slots__ = ("a", "n", "base_key", "base_cfg", "sig", "status",
-                 "reprograms", "canary", "canary_norm", "trip")
+                 "reprograms", "canary", "canary_norm", "trip",
+                 "last_canary")
 
     def __init__(self, a: np.ndarray, base_key, base_cfg, sig):
         self.a = a                    # host f-dtype dense copy (residuals)
@@ -159,6 +164,7 @@ class _MatrixState:
         self.canary = c / np.linalg.norm(c)
         self.canary_norm = float(np.linalg.norm(self.canary))
         self.trip = np.inf            # calibrated right after programming
+        self.last_canary = 0.0        # latest measured canary residual
 
 
 class AsyncSolverEngine:
@@ -185,8 +191,12 @@ class AsyncSolverEngine:
                  fallback_method: str = "cg",
                  fallback_tol: float = 1e-6,
                  fallback_maxiter: int = 800,
-                 chaos=None):
+                 chaos=None,
+                 name: str = "engine",
+                 device=None):
         self.service = service
+        self.name = name              # chaos scope + fleet identity
+        self.device = device          # optional pinned jax device
         self.max_batch = int(max_batch)
         self.flush_interval = float(flush_interval)
         self.max_pending = int(max_pending)
@@ -215,6 +225,7 @@ class AsyncSolverEngine:
         self._force_flush = False
         self._running = False
         self._drain_on_stop = True
+        self._crashed = False
         self._dispatch_count = 0
         self._cycles = 0
         self._thread: Optional[threading.Thread] = None
@@ -227,10 +238,43 @@ class AsyncSolverEngine:
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError("engine already running")
         self._running = True
-        self._thread = threading.Thread(target=self._worker_loop,
-                                        name="amc-engine-worker", daemon=True)
+        self._crashed = False
+        self._thread = threading.Thread(
+            target=self._worker_entry,
+            name=f"amc-engine-worker-{self.name}", daemon=True)
         self._thread.start()
         return self
+
+    @property
+    def alive(self) -> bool:
+        """Worker thread running and not crashed."""
+        return (self._thread is not None and self._thread.is_alive()
+                and not self._crashed)
+
+    @property
+    def crashed(self) -> bool:
+        return self._crashed
+
+    def _on_device(self):
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
+
+    def _worker_entry(self) -> None:
+        """Worker thread entry: pins the device and models hard death.
+
+        A `ReplicaDeathError` (chaos-scripted or real) terminates the
+        loop *without* draining: queued and in-flight futures stay
+        unresolved, exactly like a process kill.  Resolving them is the
+        fleet's replay contract, not the dying replica's."""
+        try:
+            with self._on_device():
+                self._worker_loop()
+        except ReplicaDeathError as e:
+            with self._lock:
+                self._crashed = True
+                self._running = False
+            log.error("replica %r worker died: %s", self.name, e)
 
     def stop(self, drain: bool = True, timeout: Optional[float] = None):
         """Stop the worker.  drain=True answers everything still queued
@@ -259,26 +303,53 @@ class AsyncSolverEngine:
     # programming (device-touching: runs on the worker once started)
     # ------------------------------------------------------------------
 
-    def program(self, matrix_id: str, a, key=None) -> None:
+    def program(self, matrix_id: str, a, key=None, cfg=None) -> None:
         """Program a matrix for serving (blocks until hot + calibrated).
 
         Before `start()` this runs inline; after, it hands off to the
         worker thread (which owns the device) and blocks on the result,
-        so callers never race a dispatch."""
+        so callers never race a dispatch.  `cfg` optionally overrides
+        the service default per matrix (composes with plan_signature)."""
+        self._run_on_worker("program", (matrix_id, a, key, cfg))
+
+    def install(self, matrix_id: str, solver, a, key, trip: float,
+                cfg=None) -> None:
+        """Install an already-programmed solver (checkpoint restore path).
+
+        Skips the whole programming pipeline - the solver's conductance
+        stacks were paid for earlier and persisted.  The canary still
+        runs against `trip`, the threshold calibrated at ORIGINAL program
+        time: a restored plan that cannot beat the health bar it was
+        saved under is rejected with `CheckpointRejectedError` (the
+        caller then falls back to full re-programming).  Same worker
+        handoff as `program`."""
+        self._run_on_worker("install", (matrix_id, solver, a, key, trip,
+                                        cfg))
+
+    def _run_on_worker(self, op: str, args: tuple) -> None:
         if self._thread is None or not self._thread.is_alive():
-            self._do_program(matrix_id, a, key)
+            with self._on_device():
+                self._do_control(op, args)
             return
         fut: Future = Future()
         with self._work:
             if not self._running:
                 raise EngineStoppedError("engine is stopping")
-            self._control.append(("program", (matrix_id, a, key), fut))
+            self._control.append((op, args, fut))
             self._work.notify_all()
         fut.result()
 
-    def _do_program(self, matrix_id: str, a, key) -> None:
+    def _do_control(self, op: str, args: tuple) -> None:
+        if op == "program":
+            self._do_program(*args)
+        elif op == "install":
+            self._do_install(*args)
+        else:                                          # pragma: no cover
+            raise ValueError(f"unknown control op {op!r}")
+
+    def _do_program(self, matrix_id: str, a, key, cfg=None) -> None:
         key = key if key is not None else jax.random.PRNGKey(0)
-        self.service.program(matrix_id, a, key)
+        self.service.program(matrix_id, a, key, cfg=cfg)
         st = _MatrixState(np.asarray(a), key,
                           self.service.matrix_cfg(matrix_id),
                           self.service.signature(matrix_id))
@@ -288,6 +359,22 @@ class AsyncSolverEngine:
         # re-program can never recalibrate itself into "healthy".
         baseline = self._canary_residual(matrix_id, st)
         st.trip = max(self.health_floor, self.health_factor * baseline)
+        with self._lock:
+            self._matrix[matrix_id] = st
+
+    def _do_install(self, matrix_id: str, solver, a, key, trip: float,
+                    cfg=None) -> None:
+        self.service.install(matrix_id, solver, a, cfg=cfg)
+        st = _MatrixState(np.asarray(a), key,
+                          self.service.matrix_cfg(matrix_id),
+                          self.service.signature(matrix_id))
+        st.trip = float(trip)
+        resid = self._canary_residual(matrix_id, st)
+        if not (resid <= st.trip):
+            raise CheckpointRejectedError(
+                f"restored plan for {matrix_id!r} fails its original "
+                f"calibration: canary residual {resid:.3e} > trip "
+                f"{st.trip:.3e}")
         with self._lock:
             self._matrix[matrix_id] = st
 
@@ -345,6 +432,30 @@ class AsyncSolverEngine:
             self._force_flush = True
             self._work.notify_all()
 
+    def cancel(self, fut: Future) -> bool:
+        """Cancel a still-queued request (the hedge-loser path).
+
+        Returns True if the request was removed before dispatch; False
+        once it left the queue (the answer will arrive anyway - the
+        caller just ignores it).  Never interrupts a running dispatch."""
+        with self._work:
+            for sig, q in self._queues.items():
+                for i, r in enumerate(q):
+                    if r.future is fut:
+                        del q[i]
+                        self.stats.cancelled += 1
+                        fut.cancel()
+                        return True
+        return False
+
+    def outstanding(self) -> List[Tuple[str, np.ndarray, Optional[float],
+                                        Future]]:
+        """Snapshot of still-queued requests as (matrix_id, b, deadline,
+        future) - the fleet's replay source when this replica dies."""
+        with self._lock:
+            return [(r.matrix_id, r.b, r.deadline, r.future)
+                    for q in self._queues.values() for r in q]
+
     # ------------------------------------------------------------------
     # introspection
     # ------------------------------------------------------------------
@@ -353,9 +464,35 @@ class AsyncSolverEngine:
         with self._lock:
             return self._matrix[matrix_id].status
 
+    def matrix_trip(self, matrix_id: str) -> float:
+        """The health-trip threshold calibrated at program time."""
+        with self._lock:
+            return float(self._matrix[matrix_id].trip)
+
     def pending(self) -> int:
         with self._lock:
             return sum(len(q) for q in self._queues.values())
+
+    def health_snapshot(self) -> Dict[str, object]:
+        """Cheap, lock-scoped health export for a router's scorer."""
+        with self._lock:
+            canaries = {mid: st.last_canary
+                        for mid, st in self._matrix.items()}
+            trips = {mid: st.trip for mid, st in self._matrix.items()}
+            statuses = {mid: st.status for mid, st in self._matrix.items()}
+            return {
+                "name": self.name,
+                "alive": (self._thread is not None
+                          and self._thread.is_alive()
+                          and not self._crashed),
+                "queue_depth": sum(len(q) for q in self._queues.values()),
+                "answered": self.stats.answered,
+                "deadline_misses": self.stats.deadline_misses,
+                "quarantines": self.stats.quarantines,
+                "canary": canaries,
+                "trip": trips,
+                "status": statuses,
+            }
 
     # ------------------------------------------------------------------
     # worker
@@ -436,11 +573,12 @@ class AsyncSolverEngine:
 
     def _run_control(self, op: str, args: tuple, fut: Future) -> None:
         try:
-            if op == "program":
-                self._do_program(*args)
-                fut.set_result(None)
-            else:                                      # pragma: no cover
-                raise ValueError(f"unknown control op {op!r}")
+            self._do_control(op, args)
+            fut.set_result(None)
+        except ReplicaDeathError:
+            fut.set_exception(EngineStoppedError(
+                f"replica {self.name!r} died during {op}"))
+            raise
         except BaseException as e:                     # noqa: BLE001
             fut.set_exception(e)
 
@@ -451,6 +589,11 @@ class AsyncSolverEngine:
     def _dispatch_cycle(self, reqs: List[_Request]) -> None:
         try:
             self._dispatch_cycle_inner(reqs)
+        except ReplicaDeathError:
+            # hard replica death is NOT contained: the worker dies with
+            # these futures unresolved (the fleet replays them), exactly
+            # like a process kill mid-dispatch
+            raise
         except BaseException as e:                     # noqa: BLE001
             # last-resort containment: no future may ever hang
             log.exception("dispatch cycle failed: %s", e)
@@ -476,7 +619,7 @@ class AsyncSolverEngine:
             return
         # 2. scripted device faults land before the dispatch (chaos)
         if self.chaos is not None:
-            for ev in self.chaos.faults_due(self._dispatch_count):
+            for ev in self.chaos.faults_due(self._dispatch_count, replica=self.name):
                 self._apply_device_fault(ev)
         # 3. split per matrix, healthy vs degraded
         groups: Dict[str, List[_Request]] = {}
@@ -514,7 +657,7 @@ class AsyncSolverEngine:
             attempts[0] += 1
             idx = self._next_dispatch_index()
             if self.chaos is not None:
-                self.chaos.on_dispatch(idx)
+                self.chaos.on_dispatch(idx, replica=self.name)
             with self._watchdog:
                 return self.service.flush_all(ids)
 
@@ -566,7 +709,7 @@ class AsyncSolverEngine:
                 attempts[0] += 1
                 idx = self._next_dispatch_index()
                 if self.chaos is not None:
-                    self.chaos.on_dispatch(idx)
+                    self.chaos.on_dispatch(idx, replica=self.name)
                 with self._watchdog:
                     return np.asarray(self.service.flush(mid))
 
@@ -591,8 +734,11 @@ class AsyncSolverEngine:
         x = np.asarray(self.service.solver(mid).solve(
             jnp.asarray(st.canary)))
         if not np.all(np.isfinite(x)):
+            st.last_canary = float("inf")
             return float("inf")
-        return float(np.linalg.norm(st.a @ x - st.canary) / st.canary_norm)
+        resid = float(np.linalg.norm(st.a @ x - st.canary) / st.canary_norm)
+        st.last_canary = resid
+        return resid
 
     def _matrix_healthy(self, mid: str, st: _MatrixState) -> bool:
         return self._canary_residual(mid, st) <= st.trip
@@ -662,7 +808,7 @@ class AsyncSolverEngine:
             attempts[0] += 1
             idx = self._next_dispatch_index()
             if self.chaos is not None:
-                self.chaos.on_dispatch(idx)
+                self.chaos.on_dispatch(idx, replica=self.name)
             with self._watchdog:
                 return np.asarray(self.service.flush(mid))
 
@@ -684,13 +830,15 @@ class AsyncSolverEngine:
             bs = jnp.asarray(np.stack([r.b for r in reqs], axis=1))
             idx = self._next_dispatch_index()
             if self.chaos is not None:
-                self.chaos.on_dispatch(idx)
+                self.chaos.on_dispatch(idx, replica=self.name)
             with self._watchdog:
                 xs = np.asarray(self.service.solve_fallback(
                     mid, bs, **self.fallback_kw))
             self.stats.fallback_rhs += len(reqs)
             for j, r in enumerate(reqs):
                 self._resolve(r, xs[:, j], "digital", 1)
+        except ReplicaDeathError:
+            raise                   # hard death: futures stay for replay
         except BaseException as e:                     # noqa: BLE001
             for r in reqs:
                 if not r.future.done():

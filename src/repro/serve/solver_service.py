@@ -158,6 +158,53 @@ class SolverService:
                        in self._packs.items() if matrix_id not in ids}
         return solver
 
+    def install(self, matrix_id: str, solver: ProgrammedSolver,
+                a: jnp.ndarray,
+                cfg: Optional[AnalogConfig] = None) -> ProgrammedSolver:
+        """Register an already-programmed solver (checkpoint restore).
+
+        The durable-recovery counterpart of `program`: the expensive
+        pipeline (partition, Schur, conductance mapping, finalize, arena
+        compile) was paid earlier - possibly in another process - and the
+        solver's plans were restored from a `ProgramStore` checkpoint.
+        Install performs the same front-door validation and executor
+        warm-up as `program` (the jit caches are global and keyed on
+        treedef + shape, so a restored plan of a signature this process
+        has seen is already hot) and records the same bookkeeping, with
+        `program_time_s` now measuring restore+warm instead of the full
+        write-verify programming cost.  Physics validation (the canary
+        residual against the original calibration threshold) is the
+        caller's job - the service cannot know the original trip.
+        """
+        if self._queues.get(matrix_id):
+            raise RuntimeError(
+                f"matrix {matrix_id!r} has {len(self._queues[matrix_id])} "
+                f"pending rhs; flush before re-installing")
+        _require_float_dtype("matrix", a)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"matrix must be square 2-D, got {a.shape}")
+        if a.shape[0] != solver.n:
+            raise ValueError(
+                f"solver was programmed for n={solver.n}, matrix is "
+                f"{a.shape}")
+        cfg = cfg if cfg is not None else solver.cfg
+        sig = plan_signature(a.shape[0], self.stages, cfg)
+        t0 = time.perf_counter()
+        jax.block_until_ready(solver.solve(jnp.zeros((solver.n,),
+                                                     dtype=a.dtype)))
+        jax.block_until_ready(solver.solve(jnp.zeros((solver.n, 1),
+                                                     dtype=a.dtype)))
+        self._solvers[matrix_id] = solver
+        self._dense[matrix_id] = a
+        self._queues[matrix_id] = []
+        self._stats[matrix_id] = MatrixStats(
+            program_time_s=time.perf_counter() - t0)
+        self._cfgs[matrix_id] = cfg
+        self._sigs[matrix_id] = sig
+        self._packs = {s: (ids, pp) for s, (ids, pp)
+                       in self._packs.items() if matrix_id not in ids}
+        return solver
+
     def solver(self, matrix_id: str) -> ProgrammedSolver:
         return self._solvers[matrix_id]
 

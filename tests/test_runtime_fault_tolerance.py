@@ -206,3 +206,101 @@ def test_elastic_make_mesh_shapes_and_axis_names():
     mesh = em.make_mesh(jax.devices())
     assert mesh.axis_names == ("data", "model")
     assert mesh.devices.size == len(jax.devices())
+
+
+# ------------------- replica-scoped chaos events (fleet) -------------------
+#
+# The fleet-level events ReplicaDeath / ReplicaStall / CheckpointCorruption
+# share the injector's dispatch-counter keying with the PR-7 events, plus a
+# `replica` scope: None matches every engine, a name pins the event to one
+# engine's counter.  The end-to-end ladder lives in tests/test_router.py;
+# these pin the firing semantics the ladder depends on.
+
+def _chaos(*events, sleeps=None):
+    from repro.runtime.chaos import ChaosInjector
+    return ChaosInjector(events, sleep=(sleeps.append if sleeps is not None
+                                        else (lambda s: None)))
+
+
+def test_replica_death_scoping_and_fire_once():
+    from repro.runtime import ReplicaDeath, ReplicaDeathError
+
+    chaos = _chaos(ReplicaDeath(at_dispatch=2, replica="r0"))
+    chaos.on_dispatch(5, replica="r1")      # scoped away: no fire
+    chaos.on_dispatch(1, replica="r0")      # too early: no fire
+    with pytest.raises(ReplicaDeathError):
+        chaos.on_dispatch(2, replica="r0")
+    chaos.on_dispatch(3, replica="r0")      # fire-once: dead events stay dead
+    assert chaos.fired == 1
+
+
+def test_replica_death_error_is_not_an_exception():
+    """ReplicaDeathError must sail past `except Exception` containment and
+    retry_step's retriable filter - it models a worker-killing fault."""
+    from repro.runtime import ReplicaDeathError
+
+    assert not issubclass(ReplicaDeathError, Exception)
+
+    def dying():
+        raise ReplicaDeathError("chaos")
+
+    with pytest.raises(ReplicaDeathError):
+        retry_step(dying, retries=3, backoff=0.0, sleep=lambda s: None)
+
+
+def test_replica_stall_window_semantics():
+    from repro.runtime import ReplicaStall
+
+    sleeps = []
+    chaos = _chaos(ReplicaStall(at_dispatch=2, seconds=0.5, until_dispatch=4,
+                                replica="r0"), sleeps=sleeps)
+    for idx in range(7):
+        chaos.on_dispatch(idx, replica="r0")
+    # armed on EVERY dispatch in [2, 4], silent outside the window
+    assert sleeps == [0.5, 0.5, 0.5]
+    assert chaos.fired == 1                 # logged once, not per dispatch
+    chaos.on_dispatch(9, replica="r0")      # retired past the window
+    assert len(sleeps) == 3
+
+
+def test_replica_none_scope_matches_everyone():
+    from repro.runtime import ReplicaStall
+
+    sleeps = []
+    chaos = _chaos(ReplicaStall(at_dispatch=0, seconds=0.1), sleeps=sleeps)
+    chaos.on_dispatch(0, replica="r0")
+    chaos.on_dispatch(0, replica="r1")
+    chaos.on_dispatch(0)                    # engine outside any fleet
+    assert sleeps == [0.1, 0.1, 0.1]
+
+
+def test_checkpoint_corruption_due_fire_once():
+    from repro.runtime import CheckpointCorruption
+
+    ev = CheckpointCorruption(at_dispatch=3, matrix_id="m", how="truncate")
+    chaos = _chaos(ev)
+    assert chaos.corruptions_due(2) == []
+    assert chaos.corruptions_due(5) == [ev]
+    assert chaos.corruptions_due(6) == []   # fire-once
+    assert chaos.log == [(5, ev)]
+
+
+# ------------------------ replica placement (fleet) ------------------------
+
+def test_assign_replicas_round_robin_wraps():
+    em = ElasticMesh()
+    pool = ["d0", "d1", "d2"]
+    assert em.assign_replicas(5, pool) == ["d0", "d1", "d2", "d0", "d1"]
+    assert em.assign_replicas(2, pool) == ["d0", "d1"]
+    # deterministic in (n_replicas, pool order): same call, same placement
+    assert em.assign_replicas(5, pool) == em.assign_replicas(5, pool)
+    with pytest.raises(ValueError):
+        em.assign_replicas(1, [])
+
+
+def test_assign_replicas_default_pool_is_jax_devices():
+    import jax
+    em = ElasticMesh()
+    got = em.assign_replicas(2)
+    dev = jax.devices()
+    assert got == [dev[0], dev[1 % len(dev)]]

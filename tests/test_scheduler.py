@@ -6,8 +6,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as tr
-from repro.serve.engine import Engine
-from repro.serve.scheduler import ContinuousBatchingEngine, Request, reset_slots
+from repro.models.lm_engine import Engine
+from repro.models.lm_scheduler import ContinuousBatchingEngine, Request, reset_slots
 from tests.conftest import reduce_cfg
 
 

@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as tr
-from repro.serve.engine import Engine
+from repro.models.lm_engine import Engine
 from tests.conftest import reduce_cfg
 
 B, S = 2, 12

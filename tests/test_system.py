@@ -18,7 +18,7 @@ from repro.core.nonideal import NonidealConfig
 from repro.core.metrics import relative_error
 from repro.checkpoint.ckpt import latest_step
 from repro.data.matrices import random_rhs, wishart
-from repro.serve.engine import Engine
+from repro.models.lm_engine import Engine
 from repro.train.trainer import Trainer
 from tests.conftest import reduce_cfg
 
