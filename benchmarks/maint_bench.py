@@ -1,0 +1,196 @@
+"""Drift-maintenance benchmark: self-healing availability + repair cost.
+
+Two scenarios (artifacts/bench/maint.json):
+
+* **availability** - one matrix serving under continuous power-law
+  retention drift on a simulated `DeviceClock`, identical clock steps and
+  traffic for two engines:
+
+    - `selfheal`  - background scrubbing on: per-block canary probes feed
+                    EWMA/CUSUM trends, degraded arrays are block-repaired
+                    *before* the SLO canary trips;
+    - `reactive`  - scrubbing off: the engine only has the reactive
+                    ladder (canary trip -> quarantine -> full re-program).
+
+  The acceptance story: `selfheal_quarantines == 0` and
+  `selfheal_deadline_misses == 0` over a horizon where the reactive
+  baseline quarantines repeatedly (`reactive_quarantines > 0`).
+
+* **repair_cost** - the ISSUE ratio on the paper's two-stage 256^2 plan
+  under a write-verify programming config: median wall time of
+  `ProgrammedSolver.repaired` on a degraded fraction of the arrays vs a
+  full `ProgrammedSolver.program`.  `repair_speedup` (full / repair,
+  acceptance floor 2x) is recorded even under --smoke - the ratio IS the
+  deliverable, smoke only trims the availability horizon.
+
+All keys are report-only for the nightly diff_bench (`_ms` suffixes, the
+ratio, counters): serving scenarios and programming times on shared CI
+boxes are too noisy to gate at +-25%.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, save_json
+from repro.core import blockamc
+from repro.core.analog import AnalogConfig
+from repro.core.nonideal import NonidealConfig
+from repro.data.matrices import random_rhs, wishart
+from repro.serve import (AsyncSolverEngine, DeviceClock, MaintenanceConfig,
+                         SolverService)
+
+SMOKE = False
+
+DRIFT = NonidealConfig(sigma=0.0, drift_nu=0.05)
+MCFG = MaintenanceConfig(scrub_blocks_per_cycle=16, block_trip=0.02,
+                         repair_batch=16)
+# write-verify programming config for the repair-cost scenario: repair
+# pays the same per-block mapping + verify loop a full program would
+WV = NonidealConfig(sigma=0.02, r_wire=1.0, wire_model="first_order",
+                    compensate_wire=True, wv_iters=3)
+
+
+def run_drift(*, scrub: bool, n: int, waves: int, per_wave: int,
+              dt: float, seed: int = 0) -> dict:
+    """One aging run: advance the clock, quiesce the scrubber (no-op when
+    scrubbing is off), serve a wave, repeat.  Identical clock steps and
+    right-hand sides for both engines."""
+    cfg = AnalogConfig(array_size=max(n // 2, 4), nonideal=DRIFT)
+    key = jax.random.PRNGKey(seed)
+    rhs = [np.asarray(random_rhs(jax.random.fold_in(key, 500 + i), n))
+           for i in range(waves * per_wave)]
+    clock = DeviceClock()
+    svc = SolverService(cfg, stages=2)
+    eng = AsyncSolverEngine(svc, clock=clock, scrub=scrub, maintenance=MCFG,
+                            flush_interval=0.01, health_floor=0.05,
+                            name="selfheal" if scrub else "reactive")
+    misses = 0
+    t0 = time.perf_counter()
+    with eng:
+        eng.program("m", wishart(key, n), jax.random.fold_in(key, 1))
+        i = 0
+        for _ in range(waves):
+            clock.advance(dt)
+            if scrub:
+                eng.maintenance_quiesce(120.0)
+            futs = []
+            for _ in range(per_wave):
+                futs.append(eng.submit("m", rhs[i]))
+                i += 1
+            eng.flush_now()
+            for f in futs:
+                misses += f.result(timeout=120).deadline_missed
+        h = eng.health()
+    wall = time.perf_counter() - t0
+    g = h["maintenance"].get("m", {})
+    return {
+        "answered": h["answered"],
+        "quarantines": h["quarantines"],
+        "deadline_misses": misses,
+        "scrub_probes": h["scrub_probes"],
+        "repairs": h["repairs"],
+        "blocks_repaired": h["blocks_repaired"],
+        "wall_ms": wall * 1e3,
+        # report-only drift gauges at end of horizon
+        "worst_dev": g.get("worst_dev", 0.0),
+        "trend_slope": g.get("trend_slope", 0.0),
+        "scrub_backlog": g.get("scrub_backlog", 0.0),
+    }
+
+
+def _median_ms(fn, warmup: int, iters: int) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def repair_cost(n: int = 256, stages: int = 2,
+                degraded_fraction: float = 0.125) -> dict:
+    """Median cost of block repair vs full re-program, two-stage n^2."""
+    cfg = AnalogConfig(array_size=n // 2, nonideal=WV)
+    key = jax.random.PRNGKey(7)
+    a = wishart(key, n)
+    k1, k2 = jax.random.split(key)
+    solver = blockamc.ProgrammedSolver.program(a, k1, cfg, stages)
+    refs = [r.ref for r in solver.block_map()]
+    k_rep = max(1, int(round(len(refs) * degraded_fraction)))
+    subset = refs[::max(1, len(refs) // k_rep)][:k_rep]
+
+    program_ms = _median_ms(
+        lambda: blockamc.ProgrammedSolver.program(a, k2, cfg, stages),
+        warmup=1, iters=3)
+    repair_ms = _median_ms(
+        lambda: solver.repaired(subset, k2), warmup=1, iters=3)
+    return {
+        "n": n,
+        "stages": stages,
+        "num_arrays": len(refs),
+        "repaired_blocks": k_rep,
+        "degraded_fraction": k_rep / len(refs),
+        "program_ms": program_ms,
+        "repair_ms": repair_ms,
+        "repair_speedup": program_ms / repair_ms if repair_ms > 0
+        else float("nan"),
+    }
+
+
+def main():
+    if SMOKE:
+        n, waves, per_wave = 16, 6, 3
+    else:
+        n, waves, per_wave = 16, 12, 4
+    dt = 0.6
+
+    out = {"params": {"n": n, "waves": waves, "per_wave": per_wave,
+                      "dt": dt, "drift_nu": DRIFT.drift_nu,
+                      "block_trip": MCFG.block_trip, "smoke": SMOKE}}
+
+    heal = run_drift(scrub=True, n=n, waves=waves, per_wave=per_wave, dt=dt)
+    react = run_drift(scrub=False, n=n, waves=waves, per_wave=per_wave,
+                      dt=dt)
+    out["selfheal"] = heal
+    out["reactive"] = react
+    # the acceptance keys, hoisted for the artifact reader
+    out["selfheal_quarantines"] = heal["quarantines"]
+    out["selfheal_deadline_misses"] = heal["deadline_misses"]
+    out["reactive_quarantines"] = react["quarantines"]
+    csv_row("maint_selfheal_n%d_w%d" % (n, waves), 0.0,
+            "quarantines=%d misses=%d repairs=%d blocks=%d probes=%d" %
+            (heal["quarantines"], heal["deadline_misses"], heal["repairs"],
+             heal["blocks_repaired"], heal["scrub_probes"]))
+    csv_row("maint_reactive_n%d_w%d" % (n, waves), 0.0,
+            "quarantines=%d misses=%d (no scrubbing)" %
+            (react["quarantines"], react["deadline_misses"]))
+
+    cost = repair_cost()
+    out["repair_cost"] = cost
+    out["repair_speedup"] = cost["repair_speedup"]
+    csv_row("maint_repair_cost_n%d" % cost["n"], 0.0,
+            "program_ms=%.1f repair_ms=%.1f (%d/%d blocks) speedup=%.1fx" %
+            (cost["program_ms"], cost["repair_ms"],
+             cost["repaired_blocks"], cost["num_arrays"],
+             cost["repair_speedup"]))
+    save_json("maint", out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: shorter aging horizon (the 256^2 "
+                         "repair-cost ratio always runs)")
+    if ap.parse_args().smoke:
+        SMOKE = True
+    main()

@@ -16,6 +16,8 @@ artifacts/bench/ consumed by EXPERIMENTS.md.
            without a scripted chaos schedule (report-only keys)
   router - replicated-fleet SLOs + replica-loss recovery: checkpoint
            restore vs full re-programming (report-only keys)
+  maint  - drift self-healing availability (scrub vs reactive) + block
+           repair vs full re-program cost ratio (report-only keys)
   grad   - differentiable solver: backward-vs-forward marginal cost of the
            implicit-diff VJP + wire-calibration convergence curve
 
@@ -34,7 +36,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (common, distributed_solver, engine_bench,
                         fig6_accuracy, fig7_variation, fig8_twostage,
                         fig9_interconnect, fig10_area_power, grad_bench,
-                        hybrid_refinement, kernel_bench, router_bench)
+                        hybrid_refinement, kernel_bench, maint_bench,
+                        router_bench)
 
 
 def main() -> None:
@@ -90,6 +93,7 @@ def main() -> None:
         engine_bench.SMOKE = True
         grad_bench.SMOKE = True
         router_bench.SMOKE = True
+        maint_bench.SMOKE = True
         common.N_SIMS_PAPER = 4
         common.SIZES_PAPER = (8, 16, 32, 64)
         fig7_variation.N_SIMS_PAPER = 4
@@ -115,6 +119,7 @@ def main() -> None:
         "engine": engine_bench.main,
         "grad": grad_bench.main,
         "router": router_bench.main,
+        "maint": maint_bench.main,
     }
     # fig9_oracle is opt-in (--only): the exact-MNA sweep at n >= 64 is a
     # nightly artifact, too heavy for the default minutes-long suite.

@@ -91,18 +91,22 @@ class CrossbarPair:
     def shape(self):
         return self.gpos.shape
 
-    def a_eff(self, cfg: AnalogConfig, r_wire=None) -> jnp.ndarray:
+    def a_eff(self, cfg: AnalogConfig, r_wire=None, drift_t=None) -> jnp.ndarray:
         """The matrix the circuit actually computes with: retention drift on
         the device state, then the configured wire model ("first_order" hot
         path or the exact "nodal" oracle) - the one readout pipeline shared
         with TileGrid, so all four executors see identical physics.
         `r_wire` optionally overrides the config wire resistance with a
-        traced scalar (differentiable first-order model; calibration)."""
+        traced scalar (differentiable first-order model; calibration);
+        `drift_t` optionally overrides the config device age with a traced
+        scalar (the simulated-device-clock path)."""
         ni = cfg.nonideal
         gp = nonideal.wire_readout(
-            nonideal.readout_conductance(self.gpos, ni), ni, r_wire=r_wire)
+            nonideal.readout_conductance(self.gpos, ni, drift_t=drift_t),
+            ni, r_wire=r_wire)
         gn = nonideal.wire_readout(
-            nonideal.readout_conductance(self.gneg, ni), ni, r_wire=r_wire)
+            nonideal.readout_conductance(self.gneg, ni, drift_t=drift_t),
+            ni, r_wire=r_wire)
         return (gp - gn) / self.g0
 
 
@@ -314,15 +318,18 @@ class TileGrid:
     def shape(self):
         return self.gpos.shape
 
-    def a_eff(self, cfg: AnalogConfig, r_wire=None) -> jnp.ndarray:
+    def a_eff(self, cfg: AnalogConfig, r_wire=None, drift_t=None) -> jnp.ndarray:
         # same readout pipeline as CrossbarPair.a_eff (drift, then wire
-        # model, with the same traced r_wire override for calibration);
-        # nonideal.wire_readout maps over the leading tile axes
+        # model, with the same traced r_wire / drift_t overrides);
+        # nonideal.wire_readout maps over the leading tile axes, and a
+        # (num,)-shaped drift_t ages each tile of the stack independently
         ni = cfg.nonideal
         gp = nonideal.wire_readout(
-            nonideal.readout_conductance(self.gpos, ni), ni, r_wire=r_wire)
+            nonideal.readout_conductance(self.gpos, ni, drift_t=drift_t),
+            ni, r_wire=r_wire)
         gn = nonideal.wire_readout(
-            nonideal.readout_conductance(self.gneg, ni), ni, r_wire=r_wire)
+            nonideal.readout_conductance(self.gneg, ni, drift_t=drift_t),
+            ni, r_wire=r_wire)
         return (gp - gn) / self.g0
 
     def pair(self, idx) -> CrossbarPair:

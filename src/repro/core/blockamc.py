@@ -595,15 +595,17 @@ def build_flat_plan(a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
 
 
 def _inv_operators(grid: TileGrid, cfg: AnalogConfig,
-                   r_wire=None) -> jnp.ndarray:
+                   r_wire=None, drift_t=None) -> jnp.ndarray:
     """The (num, s, s) matrices one INV bucket's circuits solve with.
 
     Matches analog.amc_inv: effective conductance matrix plus the diagonal
     summing-node loading term under finite OPA gain.  `r_wire` optionally
     overrides the static config wire resistance with a traced scalar (the
-    calibration path; see `finalize`).
+    calibration path; see `finalize`); `drift_t` optionally overrides the
+    static device age - a scalar, or a (num,) vector aging each array of
+    the bucket independently (the simulated-device-clock path).
     """
-    a = grid.a_eff(cfg, r_wire=r_wire)
+    a = grid.a_eff(cfg, r_wire=r_wire, drift_t=drift_t)
     if cfg.opa_gain is not None:
         load = (cfg.g0 + jnp.sum(grid.gpos + grid.gneg, axis=-1)) \
             / (cfg.opa_gain * cfg.g0)
@@ -767,14 +769,16 @@ class FinalizedPlan:
 
 
 def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig,
-                        r_wire=None) -> _MvmLevel:
+                        r_wire=None, drift_t=None) -> _MvmLevel:
     """Precompute one "mvm" level's effective operators and divisors.
 
     Derivations match `execute_flat`'s runtime path exactly: per-tile
     `CrossbarPair.a_eff` (wire model folded in) and `amc_mvm_tiled`'s
     sequential summing-node load accumulation, evaluated once here.
     `r_wire` optionally overrides the config wire resistance with a traced
-    scalar (see `finalize`).
+    scalar (see `finalize`); `drift_t`, when given, is one age per MVM
+    bucket (a scalar or a (num,) vector indexed by the tile's bucket slot)
+    feeding the per-tile readout drift.
     """
     groups: dict = {}        # (r, c) tile shape -> group index
     stacks: list = []        # per group: list of a_eff tiles
@@ -794,7 +798,11 @@ def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig,
                 windows.append([])
             g = groups[(r, c)]
             refs.append((g, len(stacks[g])))
-            stacks[g].append(pair.a_eff(cfg, r_wire=r_wire))
+            dt = None
+            if drift_t is not None:
+                d_b = drift_t[bk]
+                dt = d_b if jnp.ndim(d_b) == 0 else d_b[i]
+            stacks[g].append(pair.a_eff(cfg, r_wire=r_wire, drift_t=dt))
             windows[g].append((col_off, col_off + c))
             load = load + jnp.sum(pair.gpos + pair.gneg, axis=1)
             col_off += c
@@ -805,8 +813,46 @@ def _finalize_mvm_level(fplan: FlatPlan, rows, cfg: AnalogConfig,
                      tuple(tuple(w) for w in windows), tuple(row_refs))
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanAges:
+    """Per-physical-array device ages of one FlatPlan (simulated clock).
+
+    `inv[b]` / `mvm[b]` is bucket b's age: a scalar, or a (num,) vector
+    giving each array of the bucket its own age (arrays repaired at
+    different times drift by different amounts).  Ages are in the drift
+    model's t0 = 1 s units; `finalize(..., drift_t=PlanAges(...))` routes
+    them into every `a_eff` readout.  Like the `r_wire` override, ages are
+    array *contents* - they never enter `plan_signature`.
+    """
+    inv: tuple
+    mvm: tuple
+
+
+jax.tree_util.register_dataclass(
+    PlanAges, data_fields=["inv", "mvm"], meta_fields=[])
+
+
+def uniform_ages(fplan: FlatPlan, t) -> PlanAges:
+    """PlanAges giving every array of `fplan` the same age `t`."""
+    return PlanAges(
+        inv=tuple(jnp.full((g.shape[-3],), t, jnp.float32)
+                  for g in fplan.inv_stacks),
+        mvm=tuple(jnp.full((g.shape[-3],), t, jnp.float32)
+                  for g in fplan.mvm_stacks))
+
+
+def _split_ages(fplan: FlatPlan, drift_t):
+    """Normalise a finalize `drift_t` argument to per-bucket age tuples."""
+    if drift_t is None:
+        return None, None
+    if isinstance(drift_t, PlanAges):
+        return drift_t.inv, drift_t.mvm
+    return (tuple(drift_t for _ in fplan.inv_stacks),
+            tuple(drift_t for _ in fplan.mvm_stacks))
+
+
 def finalize(fplan: FlatPlan, cfg: AnalogConfig,
-             r_wire=None) -> FinalizedPlan:
+             r_wire=None, drift_t=None) -> FinalizedPlan:
     """Precompute all per-solve-invariant operators of a flat plan.
 
     Traceable (pure jnp), so it can run under jit; typically called once per
@@ -821,10 +867,22 @@ def finalize(fplan: FlatPlan, cfg: AnalogConfig,
     descent against the `repro.physics.nodal` oracle.  The override never
     enters `plan_signature` - it changes array contents only, never shapes
     or schedules.
+
+    `drift_t` optionally overrides the static config device age the same
+    way: None keeps `cfg.nonideal.drift_t`; a traced scalar ages the whole
+    plan uniformly; a `PlanAges` ages every physical array independently
+    (the simulated-device-clock serving path, where one programmed plan is
+    re-finalized as it grows old and block repairs reset individual
+    arrays' ages).  The stored conductances never change - drift is a
+    readout effect - so re-finalizing the same FlatPlan at new ages is the
+    exact aging model.
     """
+    inv_ages, mvm_ages = _split_ages(fplan, drift_t)
     lu_stacks = tuple(
-        jax.scipy.linalg.lu_factor(_inv_operators(g, cfg, r_wire=r_wire))
-        for g in fplan.inv_stacks)
+        jax.scipy.linalg.lu_factor(_inv_operators(
+            g, cfg, r_wire=r_wire,
+            drift_t=None if inv_ages is None else inv_ages[b]))
+        for b, g in enumerate(fplan.inv_stacks))
     mvm_levels = []
     schedule = []
     for instr in fplan.schedule:
@@ -832,7 +890,8 @@ def finalize(fplan: FlatPlan, cfg: AnalogConfig,
             _, rows, src = instr
             schedule.append(("fmvm", len(mvm_levels), src))
             mvm_levels.append(
-                _finalize_mvm_level(fplan, rows, cfg, r_wire=r_wire))
+                _finalize_mvm_level(fplan, rows, cfg, r_wire=r_wire,
+                                    drift_t=mvm_ages))
         else:
             schedule.append(instr)
     return FinalizedPlan(lu_stacks, tuple(mvm_levels), fplan.scale,
@@ -1499,6 +1558,357 @@ def pad_rhs_pow2(bs: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
     return bs, k
 
 
+# ---------------------------------------------------------------------------
+# Block-level repair (drift-aware self-healing)
+#
+# The paper's accuracy argument is that partitioning confines non-idealities
+# to small arrays; the maintenance flip side is that *repair* can be equally
+# local.  `plan_block_map` statically enumerates every physical array of a
+# plan - (kind, bucket, index) exactly as `compile_plan` interns them -
+# together with the PRNG key-derivation path `_program`/`map_tiled` would
+# use for that array.  `repair_blocks` then re-programs ONLY the named
+# arrays (full conductance-mapping pipeline, write-verify included) under
+# keys derived from a fresh root key and splices the slices into the
+# FlatPlan stacks; `splice_finalized` / `splice_arena` propagate the change
+# through the finalized LU factors, MVM operator stacks, summing-node
+# divisors and arena inverse/folded stacks by recomputing exactly the
+# affected slices with the same expressions `finalize`/`compile_arena`
+# evaluate.  Repairing every block under root key k is therefore
+# bit-identical (eager CPU) to fully re-programming under k, and repairing
+# a subset touches nothing outside the subset's buckets/rows - repair cost
+# scales with the degraded fraction, not n^2 (tests/test_block_repair.py).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRecord:
+    """One physical array of a plan: its stack slot and programming key path.
+
+    `kind`/`bucket`/`index` address the array inside
+    FlatPlan.inv_stacks/mvm_stacks (same intern order as `compile_plan`);
+    `path` is the static PRNG derivation from the root programming key -
+    a sequence of ("split", num, idx) / ("tile", num, idx) steps mirroring
+    `_program`'s 4-way key split and `map_tiled`'s per-tile split.
+    """
+    kind: str          # "inv" | "mvm"
+    bucket: int
+    index: int
+    depth: int
+    shape: Tuple[int, int]
+    path: tuple
+
+    @property
+    def ref(self) -> Tuple[str, int, int]:
+        return (self.kind, self.bucket, self.index)
+
+
+def plan_block_map(n: int, stages: Optional[int],
+                   cfg: AnalogConfig) -> Tuple[BlockRecord, ...]:
+    """Statically enumerate every physical array of a (n, stages, cfg) plan.
+
+    Walks the `_split_tree` in `compile_plan`'s emission order (inv1
+    subtree, mvm3 tiles row-major, inv4s subtree, mvm2 tiles row-major), so
+    bucket numbering and per-bucket indices match the FlatPlan intern order
+    exactly; key paths match `_program`'s split(key, 4) -> (inv1, a2, a3,
+    inv4s) and `map_tiled`'s split(key, r_tiles*c_tiles) discipline.  A
+    pure function of the plan signature - no arrays needed.
+    """
+    if stages is None:
+        stages = required_stages(n, cfg.array_size)
+    s = cfg.array_size
+    inv_buckets: dict = {}
+    mvm_buckets: dict = {}
+    records = []
+
+    def ref(buckets, key):
+        if key not in buckets:
+            buckets[key] = [len(buckets), 0]
+        b = buckets[key]
+        out = (b[0], b[1])
+        b[1] += 1
+        return out
+
+    def tiles(shape, depth, path):
+        rows, cols = shape
+        r_t, c_t = -(-rows // s), -(-cols // s)
+        for ri in range(r_t):
+            for ci in range(c_t):
+                tshape = (min((ri + 1) * s, rows) - ri * s,
+                          min((ci + 1) * s, cols) - ci * s)
+                b, i = ref(mvm_buckets, (depth, tshape))
+                records.append(BlockRecord(
+                    "mvm", b, i, depth, tshape,
+                    path + (("tile", r_t * c_t, ri * c_t + ci),)))
+
+    def walk(tree, depth, path):
+        if isinstance(tree, int):
+            b, i = ref(inv_buckets, (depth, (tree, tree)))
+            records.append(BlockRecord(
+                "inv", b, i, depth, (tree, tree), path))
+            return
+        left, right = tree
+        m = _tree_size(left)
+        nn = m + _tree_size(right)
+        walk(left, depth + 1, path + (("split", 4, 0),))
+        tiles((nn - m, m), depth, path + (("split", 4, 2),))   # mvm3 <- a3
+        walk(right, depth + 1, path + (("split", 4, 3),))
+        tiles((m, nn - m), depth, path + (("split", 4, 1),))   # mvm2 <- a2
+
+    walk(_split_tree(n, stages), 0, ())
+    return tuple(records)
+
+
+def _path_key(root_key: jax.Array, path) -> jax.Array:
+    """Derive one array's programming key from the plan's root key.
+
+    Replays the exact split sequence of `_program` (split into 4; inv1,
+    a2, a3, inv4s in that order) and `map_tiled` (split into
+    r_tiles*c_tiles, row-major) so the derived key equals the one a full
+    re-program under `root_key` would hand that array's `map_matrix`.
+    """
+    k = root_key
+    for _, num, idx in path:
+        k = jax.random.split(k, num)[idx]
+    return k
+
+
+def _target_block(root: Target, path, array_size: int) -> jnp.ndarray:
+    """The digital target block a BlockRecord's array was programmed from."""
+    t = root
+    for kind, _, idx in path:
+        if kind == "split":
+            t = (t.inv1, t.a2, t.a3, t.inv4s)[idx]
+        else:
+            rows, cols = t.shape
+            c_t = -(-cols // array_size)
+            ri, ci = idx // c_t, idx % c_t
+            t = t[ri * array_size:min((ri + 1) * array_size, rows),
+                  ci * array_size:min((ci + 1) * array_size, cols)]
+    return t.a if isinstance(t, LeafTarget) else t
+
+
+def _split_changed(changed):
+    """Group a changed-block set into per-bucket index lists."""
+    inv: dict = {}
+    mvm: dict = {}
+    for kind, b, i in changed:
+        (inv if kind == "inv" else mvm).setdefault(b, set()).add(i)
+    return ({b: sorted(s) for b, s in inv.items()},
+            {b: sorted(s) for b, s in mvm.items()})
+
+
+def repair_blocks(fplan: FlatPlan, parts: PartitionedSystem,
+                  cfg: AnalogConfig, blocks, key: jax.Array,
+                  stages: Optional[int] = None):
+    """Re-program only the named physical arrays of a programmed plan.
+
+    `blocks` is an iterable of ("inv"|"mvm", bucket, index) refs into the
+    FlatPlan stacks.  Each named array is re-derived from its digital
+    target block and re-programmed through the FULL conductance pipeline
+    (write-verify pre-distortion, variation, faults) under the key
+    `_path_key(key, path)` - the key a whole-plan re-program under `key`
+    would use for that array - then spliced into the stacks.  Returns
+    (new FlatPlan, frozenset of changed refs); untouched slices are the
+    original arrays, bit-for-bit.
+    """
+    recs = {r.ref: r for r in plan_block_map(fplan.n, stages, cfg)}
+    if len(recs) != fplan.num_arrays:
+        raise ValueError(
+            f"block map has {len(recs)} arrays but the plan holds "
+            f"{fplan.num_arrays}: wrong stages for this plan?")
+    changed = frozenset((k, int(b), int(i)) for k, b, i in blocks)
+    new_pairs: dict = {}
+    for blk in changed:
+        rec = recs.get(blk)
+        if rec is None:
+            raise KeyError(f"no such block in this plan: {blk}")
+        a_blk = _target_block(parts.root, rec.path, cfg.array_size)
+        new_pairs[blk] = analog.map_matrix(
+            a_blk, _path_key(key, rec.path), cfg, parts.scale)
+    changed_inv, changed_mvm = _split_changed(changed)
+
+    def splice(stacks, per_bucket, kind):
+        out = list(stacks)
+        for b, idxs in per_bucket.items():
+            g = out[b]
+            gp, gn = g.gpos, g.gneg
+            for i in idxs:
+                pair = new_pairs[(kind, b, i)]
+                gp = gp.at[i].set(pair.gpos)
+                gn = gn.at[i].set(pair.gneg)
+            out[b] = TileGrid(gp, gn, g.scale, g.g0)
+        return tuple(out)
+
+    out = FlatPlan(splice(fplan.inv_stacks, changed_inv, "inv"),
+                   splice(fplan.mvm_stacks, changed_mvm, "mvm"),
+                   fplan.scale, fplan.schedule, fplan.n,
+                   fplan.inv_keys, fplan.mvm_keys)
+    return out, changed
+
+
+def _mvm_level_layout(fplan: FlatPlan):
+    """Replay `_finalize_mvm_level`'s shape grouping statically.
+
+    Per "mvm" schedule level, returns the row structure as tuples of
+    (bucket, index, group, pos): the tile's FlatPlan slot plus its
+    (stack-group, group-local position) inside the finalized level.  Pure
+    metadata - the splice functions use it to locate a repaired tile's
+    every occurrence (A1-subtree levels appear twice, steps 1 and 5).
+    """
+    layouts = []
+    for instr in fplan.schedule:
+        if instr[0] != "mvm":
+            continue
+        rows = instr[1]
+        groups: dict = {}
+        counts: list = []
+        row_tiles = []
+        for row in rows:
+            rt = []
+            for bk, i in row:
+                shape = tuple(fplan.mvm_stacks[bk].shape[-2:])
+                if shape not in groups:
+                    groups[shape] = len(counts)
+                    counts.append(0)
+                g = groups[shape]
+                rt.append((bk, i, g, counts[g]))
+                counts[g] += 1
+            row_tiles.append(tuple(rt))
+        layouts.append(tuple(row_tiles))
+    return tuple(layouts)
+
+
+def splice_finalized(fin: FinalizedPlan, fplan: FlatPlan, changed,
+                     r_wire=None, drift_t=None) -> FinalizedPlan:
+    """Propagate repaired FlatPlan slices into a FinalizedPlan.
+
+    Recomputes exactly the affected pieces with the same expressions
+    `finalize` uses: the changed INV slices' effective operators + LU
+    factors (batched over the changed subset only), the changed MVM tiles'
+    effective operators, and the summing-node divisors of every tile-row
+    containing a changed tile (the divisor sums the whole row's
+    conductances, so it moves when any tile of the row is re-programmed).
+    Everything else is carried over untouched - bit-for-bit the original.
+    `drift_t` gives the ages the recomputed slices are evaluated at
+    (finalize semantics; None = the static config age, i.e. fresh).
+    """
+    cfg = fin.cfg
+    inv_ages, mvm_ages = _split_ages(fplan, drift_t)
+    changed_inv, changed_mvm = _split_changed(changed)
+    changed_set = {("mvm", b, i) for b, idxs in changed_mvm.items()
+                   for i in idxs}
+
+    lu_stacks = list(fin.lu_stacks)
+    for b, idxs in changed_inv.items():
+        grid = fplan.inv_stacks[b]
+        sel = jnp.asarray(idxs)
+        sub = TileGrid(grid.gpos[sel], grid.gneg[sel], grid.scale, grid.g0)
+        dt = None
+        if inv_ages is not None:
+            a_b = inv_ages[b]
+            dt = a_b if jnp.ndim(a_b) == 0 else a_b[sel]
+        lu_s, piv_s = jax.scipy.linalg.lu_factor(
+            _inv_operators(sub, cfg, r_wire=r_wire, drift_t=dt))
+        lu, piv = lu_stacks[b]
+        lu_stacks[b] = (lu.at[sel].set(lu_s), piv.at[sel].set(piv_s))
+
+    mvm_levels = list(fin.mvm_levels)
+    for li, row_tiles in enumerate(_mvm_level_layout(fplan)):
+        lvl = mvm_levels[li]
+        new_stacks = list(lvl.stacks)
+        new_divs = list(lvl.divs)
+        touched = False
+        for r_idx, rt in enumerate(row_tiles):
+            if not any(("mvm", bk, i) in changed_set for bk, i, _, _ in rt):
+                continue
+            touched = True
+            load = cfg.g0
+            for bk, i, g, pos in rt:
+                pair = fplan.mvm_stacks[bk].pair(i)
+                if ("mvm", bk, i) in changed_set:
+                    dt = None
+                    if mvm_ages is not None:
+                        a_b = mvm_ages[bk]
+                        dt = a_b if jnp.ndim(a_b) == 0 else a_b[i]
+                    new_stacks[g] = new_stacks[g].at[pos].set(
+                        pair.a_eff(cfg, r_wire=r_wire, drift_t=dt))
+                load = load + jnp.sum(pair.gpos + pair.gneg, axis=1)
+            if new_divs:
+                new_divs[r_idx] = 1.0 + load / (cfg.opa_gain * cfg.g0)
+        if touched:
+            mvm_levels[li] = _MvmLevel(tuple(new_stacks), tuple(new_divs),
+                                       lvl.windows, lvl.rows)
+    return FinalizedPlan(tuple(lu_stacks), tuple(mvm_levels), fin.scale,
+                         fin.schedule, fin.n, cfg, fin.num_arrays)
+
+
+def splice_arena(ap: ArenaPlan, fin: FinalizedPlan, fplan: FlatPlan,
+                 changed) -> ArenaPlan:
+    """Propagate a spliced FinalizedPlan into an ArenaPlan.
+
+    `fin` must be the already-spliced finalized plan (splice_finalized's
+    result).  Recomputes the changed INV slices' explicit inverses from
+    the new LU factors and re-folds the changed MVM tiles - plus every
+    tile sharing a row with one (their common summing-node divisor is
+    folded into the arena operators) - then patches the uniform
+    whole-schedule program's operator sequence at the affected positions.
+    Expressions match `compile_arena` pass 4 slice-for-slice.
+    """
+    cfg = ap.cfg
+    changed_inv, changed_mvm = _split_changed(changed)
+    changed_set = {("mvm", b, i) for b, idxs in changed_mvm.items()
+                   for i in idxs}
+    stacks = list(ap.stacks)
+    updated = set()
+    for b, idxs in changed_inv.items():
+        lu, piv = fin.lu_stacks[b]
+        sel = jnp.asarray(idxs)
+        eye = jnp.eye(lu.shape[-1], dtype=lu.dtype)
+        inv_s = -jax.vmap(
+            lambda l_, p_: jax.scipy.linalg.lu_solve((l_, p_), eye))(
+                lu[sel], piv[sel])
+        stacks[b] = stacks[b].at[sel].set(inv_s)
+        updated.update((b, i) for i in idxs)
+
+    sid_of = {}
+    next_id = len(fin.lu_stacks)
+    for li, lvl in enumerate(fin.mvm_levels):
+        for g in range(len(lvl.stacks)):
+            sid_of[(li, g)] = next_id
+            next_id += 1
+    for li, row_tiles in enumerate(_mvm_level_layout(fplan)):
+        lvl = fin.mvm_levels[li]
+        divs = lvl.divs if lvl.divs else (None,) * len(row_tiles)
+        for r_idx, rt in enumerate(row_tiles):
+            if not any(("mvm", bk, i) in changed_set for bk, i, _, _ in rt):
+                continue
+            div = divs[r_idx]
+            for bk, i, g, pos in rt:
+                if div is None and ("mvm", bk, i) not in changed_set:
+                    continue
+                w = -lvl.stacks[g][pos]
+                if div is not None:
+                    w = w / div[:, None]
+                sid = sid_of[(li, g)]
+                stacks[sid] = stacks[sid].at[pos].set(w)
+                updated.add((sid, pos))
+
+    program = ap.program
+    if program is not None and updated:
+        ops_seq = program[0]
+        p = 0
+        for level in ap.levels:
+            for tile in level:
+                if (tile[0], tile[1]) in updated:
+                    ops_seq = ops_seq.at[p].set(stacks[tile[0]][tile[1]])
+                p += 1
+        program = (ops_seq,) + program[1:]
+    return ArenaPlan(tuple(stacks), ap.scale, program, ap.levels,
+                     ap.out_spec, ap.arena_size, ap.n, ap.in_off, cfg,
+                     ap.kernel_ok, ap.num_arrays, ap.slot_offsets,
+                     ap.slot_ranges, ap.peak_liveness)
+
+
 class ProgrammedSolver:
     """Program-once / solve-many handle over one finalized matrix.
 
@@ -1518,7 +1928,9 @@ class ProgrammedSolver:
     """
 
     def __init__(self, fin: FinalizedPlan, arena: Optional[ArenaPlan] = None,
-                 mode: str = "fused"):
+                 mode: str = "fused", fplan: Optional[FlatPlan] = None,
+                 parts: Optional[PartitionedSystem] = None,
+                 stages: Optional[int] = None):
         if mode not in ("reference", "fused"):
             raise ValueError(f"mode must be 'reference' or 'fused', "
                              f"got {mode!r}")
@@ -1530,24 +1942,110 @@ class ProgrammedSolver:
         if self._arena is None and mode == "fused":
             self._arena = compile_arena(fin)
         self._mode = mode
+        # Maintenance state: the flat plan (raw conductance stacks - drift
+        # is a readout effect, so aging re-finalizes from here without
+        # re-programming) and the partitioned system + resolved stage
+        # count (block repair re-derives target blocks from them).  Both
+        # optional: checkpoint-restored solvers carry neither, and then
+        # `aged`/`repaired` are unavailable (callers fall back to a full
+        # re-program).
+        self._fplan = fplan
+        self._parts = parts
+        self._stages = stages
 
     @classmethod
     def program(cls, a: jnp.ndarray, key: jax.Array, cfg: AnalogConfig,
                 stages: Optional[int] = None,
                 mode: str = "fused") -> "ProgrammedSolver":
         """Full programming flow for matrix A (one noise draw)."""
-        return cls.from_plan(build_plan(a, key, cfg, stages), cfg, mode=mode)
+        parts = partition_system(a, cfg, stages)
+        if stages is None:
+            stages = required_stages(a.shape[0], cfg.array_size)
+        return cls.from_plan(program_system(parts, key, cfg), cfg,
+                             mode=mode, parts=parts, stages=stages)
 
     @classmethod
     def from_plan(cls, plan: Union[SolvePlan, FlatPlan], cfg: AnalogConfig,
-                  mode: str = "fused") -> "ProgrammedSolver":
+                  mode: str = "fused",
+                  parts: Optional[PartitionedSystem] = None,
+                  stages: Optional[int] = None) -> "ProgrammedSolver":
         """Finalize an already-built plan (recursive or flat)."""
         fplan = plan if isinstance(plan, FlatPlan) else compile_plan(plan)
-        return cls(finalize(fplan, cfg), mode=mode)
+        return cls(finalize(fplan, cfg), mode=mode, fplan=fplan,
+                   parts=parts, stages=stages)
 
     @property
     def finalized(self) -> FinalizedPlan:
         return self._fin
+
+    @property
+    def flat(self) -> Optional[FlatPlan]:
+        return self._fplan
+
+    @property
+    def stages(self) -> Optional[int]:
+        return self._stages
+
+    @property
+    def ageable(self) -> bool:
+        """Can this solver be re-finalized at new device ages?"""
+        return self._fplan is not None
+
+    @property
+    def repairable(self) -> bool:
+        """Can this solver re-program individual blocks in place?"""
+        return self._fplan is not None and self._parts is not None \
+            and self._stages is not None
+
+    def block_map(self) -> Tuple[BlockRecord, ...]:
+        """Every physical array of this plan (requires `repairable`)."""
+        if self._stages is None:
+            raise ValueError("solver was built without a resolved stage "
+                             "count; block map unavailable")
+        return plan_block_map(self._fin.n, self._stages, self._fin.cfg)
+
+    def aged(self, drift_t) -> "ProgrammedSolver":
+        """This solver with its readout evaluated at new device ages.
+
+        `drift_t` follows `finalize` semantics (scalar or `PlanAges`).
+        The conductance stacks are shared, not copied - drift is a
+        readout effect - and the returned solver has identical pytree
+        structure, so existing jit caches keep hitting.
+        """
+        if self._fplan is None:
+            raise ValueError("solver does not retain its flat plan "
+                             "(checkpoint-restored?); aging unavailable")
+        fin = finalize(self._fplan, self._fin.cfg, drift_t=drift_t)
+        arena = compile_arena(fin) if self._arena is not None else None
+        return ProgrammedSolver(fin, arena, self._mode, fplan=self._fplan,
+                                parts=self._parts, stages=self._stages)
+
+    def repaired(self, blocks, key: jax.Array,
+                 drift_t=None) -> "ProgrammedSolver":
+        """Block-level repair: re-program only `blocks`, splice in place.
+
+        `blocks` are ("inv"|"mvm", bucket, index) refs (see `block_map`);
+        `key` is the fresh root key the per-block programming keys are
+        derived from.  `drift_t` (finalize semantics) gives the ages the
+        recomputed slices are evaluated at - None means fresh.  Cost
+        scales with the number of repaired blocks: nothing outside the
+        affected bucket slices / tile rows is recomputed, and repairing
+        every block under `key` is bit-identical to a full re-program
+        under `key` (tests/test_block_repair.py).
+        """
+        if not self.repairable:
+            raise ValueError("solver does not retain its partitioned "
+                             "system (checkpoint-restored?); block repair "
+                             "unavailable - fall back to a full re-program")
+        fplan, changed = repair_blocks(self._fplan, self._parts,
+                                       self._fin.cfg, blocks, key,
+                                       stages=self._stages)
+        fin = splice_finalized(self._fin, fplan, changed, drift_t=drift_t)
+        arena = None
+        if self._arena is not None:
+            arena = splice_arena(self._arena, fin, fplan, changed)
+        return ProgrammedSolver(fin, arena, self._mode, fplan=fplan,
+                                parts=self._parts, stages=self._stages)
 
     @property
     def arena(self) -> ArenaPlan:

@@ -331,12 +331,31 @@ def program_conductances(g_target: jnp.ndarray, key: jax.Array,
     return g
 
 
-def readout_conductance(g: jnp.ndarray, ni: NonidealConfig) -> jnp.ndarray:
+def readout_conductance(g: jnp.ndarray, ni: NonidealConfig,
+                        drift_t=None) -> jnp.ndarray:
     """Device state at readout time: power-law retention drift.
 
     G(t) = G(t0) * (t/t0)^-nu with t0 = 1 s; `drift_t`/`drift_nu` are static
     config floats, so the no-drift case costs nothing at trace time.
+
+    `drift_t` optionally overrides the static config age with a *traced*
+    value (the simulated-device-clock path, mirroring `wire_readout`'s
+    r_wire override): a scalar ages the whole stack, a vector of leading-
+    axis extent ages each tile of a (..., r, c) stack independently (the
+    block-repair path, where repaired arrays are younger than their
+    neighbours).  Ages below t0 = 1 s clamp to 1 (a freshly programmed
+    device has not drifted), and `drift_nu == 0` disables drift entirely
+    whatever the override says.
     """
+    if drift_t is not None:
+        if ni.drift_nu == 0.0:
+            return g
+        t = jnp.maximum(jnp.asarray(drift_t, dtype=g.dtype), 1.0)
+        factor = t ** jnp.asarray(-ni.drift_nu, dtype=g.dtype)
+        if factor.ndim:
+            factor = factor.reshape(
+                factor.shape + (1,) * (g.ndim - factor.ndim))
+        return g * factor
     if ni.drift_nu == 0.0 or ni.drift_t <= 0.0 or ni.drift_t == 1.0:
         return g
     return g * (ni.drift_t ** (-ni.drift_nu))

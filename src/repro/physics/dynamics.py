@@ -44,6 +44,27 @@ def drift_conductance(g: jnp.ndarray, t: float, nu: float,
     return g * float((t / t0) ** (-nu))
 
 
+def drift_traced(g: jnp.ndarray, age, nu: float) -> jnp.ndarray:
+    """Traced-age variant of `drift_conductance` for live maintenance.
+
+    `age` may be a traced scalar or a per-device vector (broadcast over
+    the trailing array dims); ages are clamped to >= 1.0 - a device
+    cannot be younger than freshly programmed, and the power law is
+    normalized to t0 = 1.  This is the same factor
+    `core.nonideal.readout_conductance` applies under a `drift_t`
+    override; it lives here too so physics-level oracles can age a
+    conductance stack without importing the serving stack's config
+    plumbing.
+    """
+    if nu == 0.0:
+        return g
+    t = jnp.maximum(jnp.asarray(age, dtype=g.dtype), 1.0)
+    factor = t ** jnp.asarray(-nu, dtype=g.dtype)
+    if factor.ndim:
+        factor = factor.reshape(factor.shape + (1,) * (g.ndim - factor.ndim))
+    return g * factor
+
+
 def write_verify(g_target: jnp.ndarray, r_seg: float, *,
                  model: str = "nodal", iters: int = 5,
                  damping: float = 1.0,

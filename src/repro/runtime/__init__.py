@@ -1,6 +1,6 @@
 from repro.runtime.fault_tolerance import StepWatchdog, retry_step  # noqa: F401
 from repro.runtime.elastic import ElasticMesh  # noqa: F401
 from repro.runtime.chaos import (  # noqa: F401
-    ChaosInjector, CheckpointCorruption, DeviceFault, DispatchException,
-    DispatchLatency, ReplicaDeath, ReplicaDeathError, ReplicaStall,
-    ScriptedDispatchError)
+    AcceleratedDrift, ChaosInjector, CheckpointCorruption, DeviceFault,
+    DispatchException, DispatchLatency, HotBlock, ReplicaDeath,
+    ReplicaDeathError, ReplicaStall, ScriptedDispatchError)

@@ -133,8 +133,43 @@ class DeviceFault:
     persistent: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class AcceleratedDrift:
+    """Multiply `matrix_id`'s aging rate by `factor` at `at_dispatch`.
+
+    A retention excursion (thermal event, weak conditioning): every
+    programmed array of the matrix ages `factor`x faster in device-clock
+    time from this dispatch on.  Applied by the engine to the matrix's
+    maintenance state, so the background scrubber sees the steepened
+    trend and must repair sooner - the forcing function for the
+    proactive-repair path.
+    """
+    at_dispatch: int
+    matrix_id: str
+    factor: float = 10.0
+    replica: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HotBlock:
+    """Age ONE block of `matrix_id` `factor`x faster from `at_dispatch`.
+
+    `block` is a maintenance block ref ("inv"|"mvm", bucket, index) -
+    see `core.blockamc.plan_block_map`.  The localized failure mode that
+    makes block-granular repair pay: one array degrades while the rest
+    of the plan stays healthy, so a whole-matrix re-program would be
+    n^2-wasteful.
+    """
+    at_dispatch: int
+    matrix_id: str
+    block: Tuple[str, int, int]
+    factor: float = 100.0
+    replica: Optional[str] = None
+
+
 ChaosEvent = Union[DispatchException, DispatchLatency, DeviceFault,
-                   ReplicaDeath, ReplicaStall, CheckpointCorruption]
+                   ReplicaDeath, ReplicaStall, CheckpointCorruption,
+                   AcceleratedDrift, HotBlock]
 
 
 def _matches(e, replica: Optional[str]) -> bool:
@@ -186,6 +221,15 @@ class ChaosInjector:
             if e.persistent:
                 self._persistent[e.matrix_id] = e.nonideal
         return due
+
+    def aging_due(self, idx: int,
+                  replica: Optional[str] = None) -> List[ChaosEvent]:
+        """Aging events (AcceleratedDrift / HotBlock) due at dispatch
+        cycle `idx` (fire once).  Keyed on the DISPATCH counter like
+        every other event - maintenance probes run on a separate counter
+        and never consume these indices (the determinism contract)."""
+        return (self._due(idx, AcceleratedDrift, replica)
+                + self._due(idx, HotBlock, replica))
 
     def corruptions_due(self, idx: int,
                         replica: Optional[str] = None

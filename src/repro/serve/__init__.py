@@ -11,3 +11,5 @@ from repro.serve.async_engine import (  # noqa: F401
     EngineError, EngineStats, EngineStoppedError, SolveResult)
 from repro.serve.router import (  # noqa: F401
     FleetError, FleetStats, NoReplicaAvailableError, ReplicatedSolverFleet)
+from repro.serve.maintenance import (  # noqa: F401
+    BlockTrend, DeviceClock, MaintenanceConfig, MatrixMaintenance)

@@ -62,8 +62,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.program_store import CheckpointRejectedError
-from repro.runtime.chaos import ReplicaDeathError
+from repro.runtime.chaos import HotBlock, ReplicaDeathError
 from repro.runtime.fault_tolerance import StepWatchdog, retry_step
+from repro.serve.maintenance import MaintenanceConfig, MatrixMaintenance
 
 log = logging.getLogger("repro.serve.async_engine")
 
@@ -129,6 +130,10 @@ class EngineStats:
     replays: int = 0           # requests replayed after a quarantine
     fallback_rhs: int = 0      # rhs answered by the digital fallback
     cancelled: int = 0         # requests cancelled while still queued
+    scrub_probes: int = 0      # per-block maintenance canary MVMs
+    age_refreshes: int = 0     # plan re-finalizations at new device ages
+    repairs: int = 0           # block-repair rounds
+    blocks_repaired: int = 0   # physical arrays re-programmed in place
     recovery_s: List[float] = dataclasses.field(default_factory=list)
 
 
@@ -148,7 +153,7 @@ class _Request:
 class _MatrixState:
     __slots__ = ("a", "n", "base_key", "base_cfg", "sig", "status",
                  "reprograms", "canary", "canary_norm", "trip",
-                 "last_canary")
+                 "last_canary", "maint")
 
     def __init__(self, a: np.ndarray, base_key, base_cfg, sig):
         self.a = a                    # host f-dtype dense copy (residuals)
@@ -165,6 +170,7 @@ class _MatrixState:
         self.canary_norm = float(np.linalg.norm(self.canary))
         self.trip = np.inf            # calibrated right after programming
         self.last_canary = 0.0        # latest measured canary residual
+        self.maint = None             # MatrixMaintenance when clock-driven
 
 
 class AsyncSolverEngine:
@@ -192,6 +198,11 @@ class AsyncSolverEngine:
                  fallback_tol: float = 1e-6,
                  fallback_maxiter: int = 800,
                  chaos=None,
+                 clock=None,
+                 maintenance: Optional[MaintenanceConfig] = None,
+                 scrub: bool = True,
+                 repair_gate=None,
+                 on_repair=None,
                  name: str = "engine",
                  device=None):
         self.service = service
@@ -211,6 +222,23 @@ class AsyncSolverEngine:
         self.fallback_kw = dict(method=fallback_method, tol=fallback_tol,
                                 maxiter=fallback_maxiter)
         self.chaos = chaos
+        # drift-aware self-healing (see serve/maintenance.py DESIGN note):
+        # `clock` turns on simulated device aging; `scrub=False` keeps the
+        # aging but disables the proactive scrub/repair loop (the reactive
+        # baseline the maintenance tests and maint_bench compare against).
+        # `repair_gate` is a lock-free callable the fleet uses to stagger
+        # repair windows (it is read inside the worker's wait predicate
+        # with the engine lock held, so it MUST NOT take other locks);
+        # `on_repair(matrix_id, solver, key)` lets the fleet re-checkpoint
+        # repaired plans.
+        self.clock = clock
+        self.maintenance = (maintenance if maintenance is not None
+                            else MaintenanceConfig())
+        self.scrub_on = bool(scrub)
+        self.repair_gate = repair_gate
+        self.on_repair = on_repair
+        self._maint_count = 0         # probe/repair counter - NEVER the
+        #                               dispatch counter (chaos determinism)
         self.stats = EngineStats()
         self._watchdog = StepWatchdog(
             factor=watchdog_factor, warmup_steps=5,
@@ -243,6 +271,8 @@ class AsyncSolverEngine:
             target=self._worker_entry,
             name=f"amc-engine-worker-{self.name}", daemon=True)
         self._thread.start()
+        if self.clock is not None:
+            self.clock.subscribe(self._wake)
         return self
 
     @property
@@ -275,12 +305,23 @@ class AsyncSolverEngine:
                 self._crashed = True
                 self._running = False
             log.error("replica %r worker died: %s", self.name, e)
+        except BaseException as e:                     # noqa: BLE001
+            # any OTHER escape is a worker crash too: mark the engine
+            # dead so `submit` raises EngineStoppedError immediately
+            # instead of enqueueing into a thread that no longer exists
+            # (futures would hang forever)
+            with self._lock:
+                self._crashed = True
+                self._running = False
+            log.exception("engine %r worker crashed: %s", self.name, e)
 
     def stop(self, drain: bool = True, timeout: Optional[float] = None):
         """Stop the worker.  drain=True answers everything still queued
         first; drain=False resolves leftovers with `EngineStoppedError`.
         Raises if the worker fails to exit within `timeout` (a deadlock
         must fail loudly, not hang the caller)."""
+        if self.clock is not None:
+            self.clock.unsubscribe(self._wake)
         with self._work:
             self._running = False
             self._drain_on_stop = drain
@@ -359,6 +400,7 @@ class AsyncSolverEngine:
         # re-program can never recalibrate itself into "healthy".
         baseline = self._canary_residual(matrix_id, st)
         st.trip = max(self.health_floor, self.health_factor * baseline)
+        self._init_maint(matrix_id, st)
         with self._lock:
             self._matrix[matrix_id] = st
 
@@ -375,6 +417,7 @@ class AsyncSolverEngine:
                 f"restored plan for {matrix_id!r} fails its original "
                 f"calibration: canary residual {resid:.3e} > trip "
                 f"{st.trip:.3e}")
+        self._init_maint(matrix_id, st)
         with self._lock:
             self._matrix[matrix_id] = st
 
@@ -408,7 +451,12 @@ class AsyncSolverEngine:
         fut: Future = Future()
         req = _Request(matrix_id, b_host, deadline, fut, now)
         with self._work:
-            if not self._running:
+            # a stopped engine AND a dead worker both refuse immediately:
+            # enqueueing behind a thread that will never drain the queue
+            # turns "typed error now" into "future hangs forever"
+            if not self._running or self._crashed or (
+                    self._thread is not None
+                    and not self._thread.is_alive()):
                 raise EngineStoppedError("engine is not running")
             q = self._queues.setdefault(st.sig, [])
             if len(q) >= self.max_pending:
@@ -474,12 +522,21 @@ class AsyncSolverEngine:
             return sum(len(q) for q in self._queues.values())
 
     def health_snapshot(self) -> Dict[str, object]:
-        """Cheap, lock-scoped health export for a router's scorer."""
+        """Cheap, lock-scoped health export for a router's scorer.
+
+        "maintenance" carries the per-matrix drift gauges (trend slope,
+        predicted time-to-trip, scrub backlog, blocks repaired, ...) -
+        report-only observability, surfaced through `FleetStats` and the
+        maint_bench artifact keys."""
+        t_now = self.clock.now() if self.clock is not None else 0.0
         with self._lock:
             canaries = {mid: st.last_canary
                         for mid, st in self._matrix.items()}
             trips = {mid: st.trip for mid, st in self._matrix.items()}
             statuses = {mid: st.status for mid, st in self._matrix.items()}
+            maint = {mid: st.maint.gauges(t_now)
+                     for mid, st in self._matrix.items()
+                     if st.maint is not None}
             return {
                 "name": self.name,
                 "alive": (self._thread is not None
@@ -492,7 +549,38 @@ class AsyncSolverEngine:
                 "canary": canaries,
                 "trip": trips,
                 "status": statuses,
+                "scrub_probes": self.stats.scrub_probes,
+                "repairs": self.stats.repairs,
+                "blocks_repaired": self.stats.blocks_repaired,
+                "maintenance": maint,
             }
+
+    def health(self) -> Dict[str, object]:
+        """Alias of `health_snapshot` (the observability entry point)."""
+        return self.health_snapshot()
+
+    @property
+    def maintenance_pending(self) -> int:
+        """Blocks currently scheduled for repair (the fleet's staggering
+        signal: a replica with pending repairs wants the repair token)."""
+        with self._lock:
+            return sum(len(st.maint.pending)
+                       for st in self._matrix.values()
+                       if st.maint is not None)
+
+    def maintenance_quiesce(self, timeout: float = 30.0) -> bool:
+        """Block until the scrubber has nothing left to do at the current
+        device time (ages synced, backlog probed, allowed repairs done).
+        Returns False on timeout.  Deterministic-scenario helper: advance
+        the clock, quiesce, then drive traffic."""
+        deadline = time.monotonic() + float(timeout)
+        while time.monotonic() < deadline:
+            with self._lock:
+                due = self._maint_due() and not self._crashed
+            if not due:
+                return True
+            time.sleep(0.002)
+        return False
 
     # ------------------------------------------------------------------
     # worker
@@ -533,7 +621,8 @@ class AsyncSolverEngine:
                 now = time.monotonic()
                 while (self._running and not self._control
                        and not any(self._bucket_due(q, now)
-                                   for q in self._queues.values())):
+                                   for q in self._queues.values())
+                       and not self._maint_due()):
                     self._work.wait(self._next_wakeup(now))
                     now = time.monotonic()
                 if not self._running:
@@ -550,6 +639,11 @@ class AsyncSolverEngine:
                 self._run_control(op, args, fut)
             for _, reqs in due:
                 self._dispatch_cycle(reqs)
+            if not control and not due:
+                # pure maintenance wakeup: the engine scrubs/repairs only
+                # on otherwise-idle cycles, so foreground traffic always
+                # wins the worker
+                self._maintenance_cycle()
         # stopped: drain or void what's left
         with self._lock:
             leftovers = [r for q in self._queues.values() for r in q]
@@ -617,10 +711,20 @@ class AsyncSolverEngine:
                 live.append(r)
         if not live:
             return
-        # 2. scripted device faults land before the dispatch (chaos)
+        # 2. scripted device faults land before the dispatch (chaos);
+        #    aging events (accelerated drift / hot blocks) are keyed on
+        #    the same dispatch counter - only maintenance PROBES live on
+        #    a separate counter
         if self.chaos is not None:
             for ev in self.chaos.faults_due(self._dispatch_count, replica=self.name):
                 self._apply_device_fault(ev)
+            for ev in self.chaos.aging_due(self._dispatch_count,
+                                           replica=self.name):
+                self._apply_aging_event(ev)
+        # 2b. bake current device ages into the serving plans, so this
+        #     dispatch (and its canary) sees the drift accumulated since
+        #     the last sync - with or without scrubbing enabled
+        self._sync_clock()
         # 3. split per matrix, healthy vs degraded
         groups: Dict[str, List[_Request]] = {}
         for r in live:
@@ -771,6 +875,9 @@ class AsyncSolverEngine:
                                  cfg=st.base_cfg.with_(nonideal=ni))
             with self._lock:
                 st.sig = self.service.signature(mid)
+            # whole-matrix re-program: every array is fresh, so the old
+            # maintenance state (ages, trends, baselines) is void
+            self._init_maint(mid, st)
             if self._matrix_healthy(mid, st):
                 recovered = True
                 break
@@ -844,6 +951,160 @@ class AsyncSolverEngine:
                 if not r.future.done():
                     r.future.set_exception(e)
 
+    # -- drift maintenance (worker thread only) --------------------------
+    #
+    # The background scrubber of the maintenance subsystem (DESIGN note in
+    # serve/maintenance.py).  Counter discipline: probes and repairs bump
+    # `_maint_count`, NEVER `_next_dispatch_index` - a chaos trace replays
+    # identically with scrubbing on or off (tests/test_maintenance.py).
+
+    def _wake(self) -> None:
+        """DeviceClock subscriber: nudge an idle worker to scrub."""
+        with self._work:
+            self._work.notify_all()
+
+    def _init_maint(self, matrix_id: str, st: _MatrixState) -> None:
+        """(Re)build per-matrix maintenance state after any full program.
+
+        Maintenance needs a device clock, a drift model to age under, and
+        a solver retaining its flat plan + partitioned system (checkpoint-
+        restored solvers fall back to the reactive ladder)."""
+        st.maint = None
+        if self.clock is None:
+            return
+        solver = self.service.solver(matrix_id)
+        if not getattr(solver, "repairable", False):
+            return
+        if self.service.matrix_cfg(matrix_id).nonideal.drift_nu == 0.0:
+            return
+        st.maint = MatrixMaintenance(solver, self.maintenance,
+                                     self.clock.now())
+
+    def _repair_allowed(self) -> bool:
+        gate = self.repair_gate
+        return gate is None or bool(gate())
+
+    def _maint_due(self) -> bool:
+        """Wait-predicate hook (called with the engine lock held - the
+        repair gate must therefore be lock-free).  Age syncing for
+        non-scrubbing engines happens lazily at dispatch instead, so a
+        reactive baseline never wakes for maintenance."""
+        if self.clock is None or not self.scrub_on:
+            return False
+        t = self.clock.now()
+        for st in self._matrix.values():
+            m = st.maint
+            if m is None:
+                continue
+            if m.synced_at != t or m.backlog(t) > 0:
+                return True
+            if m.pending and self._repair_allowed():
+                return True
+        return False
+
+    def _sync_clock(self) -> None:
+        """Re-finalize every clock-tracked plan at current device ages
+        (cheap no-op while the clock has not moved)."""
+        if self.clock is None:
+            return
+        t = self.clock.now()
+        with self._lock:
+            items = list(self._matrix.items())
+        for mid, st in items:
+            if st.maint is not None and st.maint.synced_at != t:
+                self._refresh_ages(mid, st, t)
+
+    def _refresh_ages(self, mid: str, st: _MatrixState, t: float) -> None:
+        m = st.maint
+        solver = self.service.solver(mid)
+        self.service.refresh(mid, solver.aged(m.plan_ages(solver.flat, t)))
+        m.synced_at = t
+        self.stats.age_refreshes += 1
+
+    def _maintenance_cycle(self) -> None:
+        """One idle maintenance pass: sync ages, probe a few blocks per
+        matrix, repair what is (predicted to be) degrading.  Maintenance
+        failures never take serving down: a matrix whose maintenance path
+        breaks drops back to the reactive canary ladder."""
+        if self.clock is None:
+            return
+        t = self.clock.now()
+        with self._lock:
+            items = list(self._matrix.items())
+        for mid, st in items:
+            m = st.maint
+            if m is None:
+                continue
+            try:
+                if m.synced_at != t:
+                    self._refresh_ages(mid, st, t)
+                if not self.scrub_on:
+                    continue
+                if m.backlog(t) > 0:
+                    solver = self.service.solver(mid)
+                    done = m.scrub(solver.flat, solver.cfg, t,
+                                   self.maintenance.scrub_blocks_per_cycle)
+                    self._maint_count += done
+                    self.stats.scrub_probes += done
+                if m.pending and self._repair_allowed():
+                    self._do_repairs(mid, st, t)
+            except ReplicaDeathError:
+                raise
+            except BaseException as e:                 # noqa: BLE001
+                log.exception("maintenance for %r failed (%s); falling "
+                              "back to the reactive ladder", mid, e)
+                st.maint = None
+
+    def _do_repairs(self, mid: str, st: _MatrixState, t: float) -> None:
+        """Re-program just the scheduled blocks and splice them into the
+        serving plan (`ProgrammedSolver.repaired`); cost scales with the
+        degraded fraction, not n^2."""
+        m = st.maint
+        blocks = sorted(m.pending)[:self.maintenance.repair_batch]
+        solver = self.service.solver(mid)
+        if not solver.repairable:                      # pragma: no cover
+            m.pending.clear()
+            return
+        m.repair_rounds += 1
+        # fresh fold_in lineage, disjoint from the recovery (reprograms)
+        # and chaos-fault (10_000+) key streams
+        key = jax.random.fold_in(st.base_key, 20_000 + m.repair_rounds)
+        repaired = solver.repaired(blocks, key)
+        self.service.refresh(mid, repaired)
+        m.note_repaired(blocks, repaired.flat, repaired.cfg, t)
+        self._maint_count += 1
+        self.stats.repairs += 1
+        self.stats.blocks_repaired += len(blocks)
+        log.info("repaired %d/%d block(s) of %r at device time %.3f",
+                 len(blocks), len(m.refs), mid, t)
+        if self.on_repair is not None:
+            try:
+                self.on_repair(mid, repaired, key)
+            except Exception as e:                     # noqa: BLE001
+                log.exception("on_repair callback for %r failed: %s",
+                              mid, e)
+
+    def _apply_aging_event(self, ev) -> None:
+        """Chaos AcceleratedDrift / HotBlock: steepen the aging of a
+        matrix (or one of its blocks) from now on.  Nothing is marked
+        healthy/unhealthy here - the scrubber (or the canary) has to
+        catch the consequences."""
+        st = self._matrix.get(ev.matrix_id)
+        if st is None or st.maint is None:
+            return
+        m = st.maint
+        if isinstance(ev, HotBlock):
+            ref = tuple(ev.block)
+            m.block_scale[ref] = (m.block_scale.get(ref, 1.0)
+                                  * float(ev.factor))
+            log.warning("chaos: hot block %s in %r (x%g aging)",
+                        ref, ev.matrix_id, ev.factor)
+        else:
+            m.age_scale *= float(ev.factor)
+            log.warning("chaos: accelerated drift on %r (x%g aging)",
+                        ev.matrix_id, ev.factor)
+        m.synced_at = None            # force a re-bake at the new rates
+
     # -- bookkeeping -----------------------------------------------------
 
     def _apply_device_fault(self, ev) -> None:
@@ -860,6 +1121,7 @@ class AsyncSolverEngine:
             cfg=st.base_cfg.with_(nonideal=ev.nonideal))
         with self._lock:
             st.sig = self.service.signature(ev.matrix_id)
+        self._init_maint(ev.matrix_id, st)
         log.warning("chaos: device fault injected into %r", ev.matrix_id)
 
     def _next_dispatch_index(self) -> int:

@@ -1,0 +1,307 @@
+"""Drift-aware self-healing: device clock, scrub trends, repair scheduling.
+
+DESIGN - the maintenance subsystem
+==================================
+Retention drift (the dominant time-domain failure mode of analog compute;
+power-law G(t) = G * t^-nu in `physics/dynamics.py` / `core/nonideal.py`)
+is something that happens to a programmed plan *while it serves*.  The
+maintenance subsystem makes the serving stack live with that:
+
+* **Simulated device clock.**  A `DeviceClock` is shared by everything
+  that models time; per-array `programmed_at` timestamps live in
+  `MatrixMaintenance`.  Aging never touches the stored conductances -
+  drift is a readout effect - so the engine re-finalizes the retained
+  FlatPlan at the current `PlanAges` (`ProgrammedSolver.aged`), exactly
+  like PR 8's traced `r_wire` override and equally invisible to
+  `plan_signature`.
+
+* **Background scrubbing.**  On idle worker cycles the engine probes a
+  few physical arrays round-robin: one cheap per-block MVM
+  (`a_eff(drift_t=age) @ v` against a baseline recorded at programming
+  time) - NOT a full solve, and never consuming a dispatch index, so
+  chaos traces replay identically with scrubbing on or off (the
+  dispatch-counter contract, TESTING.md).  Each block's relative
+  deviation feeds a `BlockTrend` (EWMA slope + one-sided CUSUM of the
+  deviation increments) that extrapolates predicted time-to-trip.
+
+* **Proactive block repair.**  When a block's deviation crosses
+  `block_trip`, or its trend predicts crossing within `repair_lead`
+  clock seconds, the scheduler re-programs JUST that block
+  (`ProgrammedSolver.repaired` -> `core.blockamc.repair_blocks` under a
+  fresh fold_in key, write-verify included) and splices it into the
+  serving stacks - cost scales with the degraded fraction, and the SLO
+  canary never trips.  The reactive ladder (canary -> quarantine ->
+  full re-program) stays as the backstop.
+
+* **Fleet staggering.**  `ReplicatedSolverFleet` hands a rotating repair
+  token to one replica at a time (`repair_gate`); a replica holding the
+  token with repairs pending is scored `degraded` - routable at lower
+  priority, never `quarantined` - so fleet goodput sees no dip while
+  replicas take maintenance windows in turn.
+
+Thresholds are physical: a block's deviation under pure drift is
+|1 - age^-nu|, so `block_trip` directly bounds the per-array operator
+error the engine tolerates before repairing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blockamc
+
+BlockRef = Tuple[str, int, int]          # ("inv"|"mvm", bucket, index)
+
+
+class DeviceClock:
+    """Advanceable simulated device time (seconds; t=0 at construction).
+
+    Thread-safe; subscribers (engines) are notified outside the lock on
+    every `advance`, so an idle worker wakes to scrub as soon as time
+    moves even with no traffic in flight.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+        self._lock = threading.Lock()
+        self._subs: List[Callable[[], None]] = []
+
+    def now(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        """Move time forward by `dt` seconds; returns the new time."""
+        if dt < 0:
+            raise ValueError(f"device time cannot run backwards (dt={dt})")
+        with self._lock:
+            self._t += float(dt)
+            t = self._t
+            subs = list(self._subs)
+        for cb in subs:
+            cb()
+        return t
+
+    def subscribe(self, cb: Callable[[], None]) -> None:
+        with self._lock:
+            if cb not in self._subs:
+                self._subs.append(cb)
+
+    def unsubscribe(self, cb: Callable[[], None]) -> None:
+        with self._lock:
+            if cb in self._subs:
+                self._subs.remove(cb)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceConfig:
+    """Scrub/repair policy knobs (see the DESIGN note above).
+
+    `scrub_blocks_per_cycle`: probes per idle maintenance cycle (the
+    scrub cadence - a full sweep of a plan with B arrays takes
+    ceil(B / this) idle cycles at one clock time).
+    `block_trip`: relative per-block probe deviation that marks an array
+    degraded (repair immediately).
+    `repair_lead`: repair when the trend predicts `block_trip` will be
+    crossed within this many clock seconds (0 = repair only on trip).
+    `repair_batch`: max blocks repaired per maintenance cycle.
+    `ewma_alpha` / `min_probes`: trend smoothing and the evidence floor
+    before extrapolation is trusted.
+    """
+    scrub_blocks_per_cycle: int = 8
+    block_trip: float = 0.05
+    repair_lead: float = 0.0
+    repair_batch: int = 8
+    ewma_alpha: float = 0.5
+    min_probes: int = 2
+
+
+class BlockTrend:
+    """EWMA-slope + CUSUM trend of one block's probe deviation.
+
+    `slope` is an EWMA of the instantaneous deviation rate d(dev)/dt in
+    clock units; `cusum` accumulates positive deviation increments (a
+    one-sided drift detector - it only ever grows while the block
+    degrades, so a noisy flat block never schedules a repair).  Linear
+    extrapolation of the concave power-law deviation curve predicts the
+    trip *early*, which is the safe direction for proactive repair.
+    """
+
+    __slots__ = ("alpha", "t", "dev", "slope", "probes", "cusum")
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = float(alpha)
+        self.t: Optional[float] = None
+        self.dev: Optional[float] = None
+        self.slope: Optional[float] = None
+        self.probes = 0
+        self.cusum = 0.0
+
+    def observe(self, t: float, dev: float) -> None:
+        if self.t is not None and t > self.t:
+            inst = (dev - self.dev) / (t - self.t)
+            self.slope = inst if self.slope is None else (
+                self.alpha * inst + (1.0 - self.alpha) * self.slope)
+            self.cusum = max(0.0, self.cusum + (dev - self.dev))
+        self.t, self.dev = float(t), float(dev)
+        self.probes += 1
+
+    def ready(self, min_probes: int) -> bool:
+        return self.probes >= min_probes and self.slope is not None
+
+    def time_to_trip(self, trip: float) -> float:
+        """Predicted clock seconds until `dev` crosses `trip` (inf if the
+        trend is flat or improving; 0 if already over)."""
+        if self.dev is None:
+            return float("inf")
+        if self.dev >= trip:
+            return 0.0
+        if self.slope is None or self.slope <= 0.0:
+            return float("inf")
+        return (trip - self.dev) / self.slope
+
+
+class MatrixMaintenance:
+    """Per-matrix maintenance state: ages, probe baselines, trends.
+
+    Owned by the engine worker thread; the engine reads gauge summaries
+    under its own lock.  Probing needs no digital targets: each block's
+    baseline response (fresh `a_eff @ v` at age 1) is recorded at
+    program/repair time, and deviation is measured against it - the
+    block grades itself relative to its own healthy state.
+    """
+
+    def __init__(self, solver: "blockamc.ProgrammedSolver",
+                 mcfg: MaintenanceConfig, now: float):
+        if not solver.repairable:
+            raise ValueError("maintenance needs a repairable solver "
+                             "(retained flat plan + partitioned system)")
+        self.mcfg = mcfg
+        self.refs: Tuple[BlockRef, ...] = tuple(
+            r.ref for r in solver.block_map())
+        self.programmed_at: Dict[BlockRef, float] = {
+            ref: now for ref in self.refs}
+        self.probed_at: Dict[BlockRef, float] = {ref: now
+                                                 for ref in self.refs}
+        self.trends: Dict[BlockRef, BlockTrend] = {
+            ref: BlockTrend(mcfg.ewma_alpha) for ref in self.refs}
+        self.age_scale = 1.0                       # chaos AcceleratedDrift
+        self.block_scale: Dict[BlockRef, float] = {}  # chaos HotBlock
+        self.pending: set = set()                  # repairs scheduled
+        self.synced_at = now                       # plan ages last baked at
+        self.repair_rounds = 0
+        self.blocks_repaired = 0
+        self._cursor = 0
+        self._probe_v: Dict[BlockRef, np.ndarray] = {}
+        self._baseline: Dict[BlockRef, np.ndarray] = {}
+        for ref in self.refs:
+            self._calibrate(solver.flat, solver.cfg, ref)
+
+    # -- block access ----------------------------------------------------
+
+    @staticmethod
+    def _pair(fplan: "blockamc.FlatPlan", ref: BlockRef):
+        kind, b, i = ref
+        grid = (fplan.inv_stacks if kind == "inv" else fplan.mvm_stacks)[b]
+        return grid.pair(i)
+
+    def _calibrate(self, fplan, cfg, ref: BlockRef) -> None:
+        pair = self._pair(fplan, ref)
+        c = pair.shape[1]
+        v = np.linspace(1.0, 2.0, c, dtype=np.float64).astype(np.float32)
+        v /= np.linalg.norm(v)
+        self._probe_v[ref] = v
+        self._baseline[ref] = np.asarray(
+            pair.a_eff(cfg, drift_t=1.0) @ jnp.asarray(v))
+
+    # -- aging -----------------------------------------------------------
+
+    def age(self, ref: BlockRef, now: float) -> float:
+        dt = max(0.0, now - self.programmed_at[ref])
+        return 1.0 + dt * self.age_scale * self.block_scale.get(ref, 1.0)
+
+    def plan_ages(self, fplan: "blockamc.FlatPlan",
+                  now: float) -> "blockamc.PlanAges":
+        def per_bucket(kind, stacks):
+            return tuple(
+                jnp.asarray([self.age((kind, b, i), now)
+                             for i in range(g.shape[-3])], jnp.float32)
+                for b, g in enumerate(stacks))
+        return blockamc.PlanAges(per_bucket("inv", fplan.inv_stacks),
+                                 per_bucket("mvm", fplan.mvm_stacks))
+
+    # -- scrubbing -------------------------------------------------------
+
+    def backlog(self, now: float) -> int:
+        """Blocks not yet probed at the current clock time."""
+        return sum(1 for ref in self.refs if self.probed_at[ref] < now)
+
+    def probe(self, fplan, cfg, ref: BlockRef, now: float) -> float:
+        """One cheap per-block canary MVM; relative deviation vs baseline."""
+        pair = self._pair(fplan, ref)
+        out = np.asarray(pair.a_eff(
+            cfg, drift_t=float(self.age(ref, now)))
+            @ jnp.asarray(self._probe_v[ref]))
+        base = self._baseline[ref]
+        return float(np.linalg.norm(out - base)
+                     / (np.linalg.norm(base) + 1e-12))
+
+    def scrub(self, fplan, cfg, now: float, budget: int) -> int:
+        """Probe up to `budget` stale blocks round-robin; schedule repairs
+        for blocks over `block_trip` or trending into it within
+        `repair_lead`.  Returns the number of probes performed."""
+        done = 0
+        for _ in range(len(self.refs)):
+            if done >= budget:
+                break
+            ref = self.refs[self._cursor]
+            self._cursor = (self._cursor + 1) % len(self.refs)
+            if self.probed_at[ref] >= now:
+                continue
+            dev = self.probe(fplan, cfg, ref, now)
+            tr = self.trends[ref]
+            tr.observe(now, dev)
+            self.probed_at[ref] = now
+            done += 1
+            if dev >= self.mcfg.block_trip or (
+                    tr.ready(self.mcfg.min_probes)
+                    and tr.time_to_trip(self.mcfg.block_trip)
+                    <= self.mcfg.repair_lead):
+                self.pending.add(ref)
+        return done
+
+    # -- repair bookkeeping ----------------------------------------------
+
+    def note_repaired(self, refs, fplan, cfg, now: float) -> None:
+        """Reset age/trend/baseline of just-repaired blocks (fresh
+        conductances => fresh self-reference)."""
+        for ref in refs:
+            self.programmed_at[ref] = now
+            self.probed_at[ref] = now
+            self.trends[ref] = BlockTrend(self.mcfg.ewma_alpha)
+            self.pending.discard(ref)
+            self._calibrate(fplan, cfg, ref)
+        self.blocks_repaired += len(refs)
+
+    # -- gauges ----------------------------------------------------------
+
+    def gauges(self, now: float) -> Dict[str, float]:
+        """Report-only drift gauges for health()/FleetStats/benchmarks."""
+        devs = [t.dev for t in self.trends.values() if t.dev is not None]
+        slopes = [t.slope for t in self.trends.values()
+                  if t.slope is not None]
+        ttts = [t.time_to_trip(self.mcfg.block_trip)
+                for t in self.trends.values() if t.dev is not None]
+        return {
+            "age": max(self.age(ref, now) for ref in self.refs),
+            "worst_dev": max(devs) if devs else 0.0,
+            "trend_slope": max(slopes) if slopes else 0.0,
+            "time_to_trip": min(ttts) if ttts else float("inf"),
+            "scrub_backlog": float(self.backlog(now)),
+            "pending_repairs": float(len(self.pending)),
+            "blocks_repaired": float(self.blocks_repaired),
+        }

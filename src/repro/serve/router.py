@@ -104,6 +104,9 @@ class FleetStats:
     restores: int = 0          # recoveries served from checkpoint
     reprogram_fallbacks: int = 0   # recoveries that had to re-program
     rejected_checkpoints: int = 0  # stale/corrupt/canary-failed restores
+    repairs: int = 0           # block-repair rounds across the fleet
+    recheckpoints: int = 0     # repaired plans persisted to the store
+    maintenance_windows: int = 0   # repair-token grants (staggered)
     restore_s: List[float] = dataclasses.field(default_factory=list)
     reprogram_s: List[float] = dataclasses.field(default_factory=list)
 
@@ -198,6 +201,7 @@ class ReplicatedSolverFleet:
                  mesh: Optional[ElasticMesh] = None,
                  devices: Optional[list] = None,
                  chaos=None,
+                 clock=None,
                  hedge_delay: Optional[float] = None,
                  affinity_slack: float = 0.5,
                  ewma_alpha: float = 0.3,
@@ -211,6 +215,7 @@ class ReplicatedSolverFleet:
         self.engine_kw = dict(engine_kw or {})
         self.store = store
         self.chaos = chaos
+        self.clock = clock            # shared DeviceClock (drift aging)
         self.hedge_delay = hedge_delay
         self.affinity_slack = float(affinity_slack)
         self.ewma_alpha = float(ewma_alpha)
@@ -219,6 +224,13 @@ class ReplicatedSolverFleet:
         self.drain_grace = float(drain_grace)
         self.poll_interval = float(poll_interval)
         self.stats = FleetStats()
+
+        # maintenance staggering: at most ONE replica holds the repair
+        # token at a time, so scrub/repair windows never overlap across
+        # the fleet (the goodput invariant).  The token is a plain
+        # attribute read lock-free by each engine's repair gate.
+        self._repair_token: Optional[str] = None
+        self._maint_rotor = 0
 
         placement = (mesh or ElasticMesh()).assign_replicas(
             n_replicas, devices)
@@ -234,9 +246,21 @@ class ReplicatedSolverFleet:
         self._timers: List[threading.Timer] = []
 
     def _make_replica(self, name: str, device) -> _Replica:
+        kw = dict(self.engine_kw)
+        if self.clock is not None:
+            # thread the shared device clock through every replica; the
+            # repair gate reads the token without any lock (it runs
+            # inside the engine's wait predicate), and on_repair
+            # re-checkpoints repaired plans
+            kw.setdefault("clock", self.clock)
+            kw.setdefault("repair_gate",
+                          lambda name=name: self._repair_token == name)
+            kw.setdefault("on_repair",
+                          lambda mid, solver, key, name=name:
+                          self._on_repair(name, mid, solver, key))
         engine = AsyncSolverEngine(self.make_service(), name=name,
                                    device=device, chaos=self.chaos,
-                                   **self.engine_kw)
+                                   **kw)
         return _Replica(name, device, engine, self.ewma_alpha)
 
     # ------------------------------------------------------------------
@@ -362,6 +386,11 @@ class ReplicatedSolverFleet:
             if not self._running:
                 raise FleetError("fleet is not running")
             rec = self._matrices[matrix_id]
+            # pick FIRST: a fully-drained fleet must reject with
+            # NoReplicaAvailableError before any counter moves, so a
+            # failed admission leaves `stats`/`_submits` (and the chaos
+            # corruption schedule keyed on `_submits`) untouched
+            replica = self._pick(rec.sig)
             self._submits += 1
             now = time.monotonic()
             deadline = (None if deadline_s is None
@@ -369,7 +398,6 @@ class ReplicatedSolverFleet:
             req = _FleetRequest(matrix_id, np.array(b), deadline,
                                 Future(), now)
             self.stats.submitted += 1
-            replica = self._pick(rec.sig)
             self._launch_leg(req, replica)
             do_hedge = (hedge if hedge is not None
                         else (self.hedge_delay is not None
@@ -517,6 +545,8 @@ class ReplicatedSolverFleet:
                     pass                    # nothing stored yet
         to_replace: List[_Replica] = []
         with self._lock:
+            if self.clock is not None:
+                self._rotate_repair_token()
             for r in self._replicas:
                 if r.state in ("quarantined", "dead"):
                     continue
@@ -533,6 +563,17 @@ class ReplicatedSolverFleet:
                     snap["queue_depth"],
                     max(1, r.engine.max_batch))
                 score = r.score.value()
+                if (self._repair_token == r.name
+                        and r.state in ("active", "degraded")):
+                    # the staggering invariant: a replica in its repair
+                    # window is DEGRADED (deprioritized but routable) and
+                    # is never drained or quarantined for the elevated
+                    # canary its own maintenance causes
+                    if r.state == "active":
+                        r.state = "degraded"
+                        log.info("replica %r degraded for maintenance "
+                                 "window", r.name)
+                    continue
                 if r.state == "active" and score >= self.degrade_score:
                     r.state = "degraded"
                     log.warning("replica %r degraded (score %.2f)",
@@ -557,6 +598,49 @@ class ReplicatedSolverFleet:
                         to_replace.append(r)
         for r in to_replace:
             self._quarantine_and_replace(r)
+
+    def _rotate_repair_token(self) -> None:
+        """Grant/release the fleet-wide repair token (lock held).
+
+        Release when the holder is gone or has nothing left to repair;
+        grant round-robin to the next routable replica with pending
+        repairs, so maintenance windows stagger across the fleet instead
+        of every replica repairing (and degrading) at once."""
+        if self._repair_token is not None:
+            holder = next((r for r in self._replicas
+                           if r.name == self._repair_token), None)
+            if (holder is None or not holder.engine.alive
+                    or not holder.routable
+                    or holder.engine.maintenance_pending == 0):
+                self._repair_token = None
+        if self._repair_token is None:
+            n = len(self._replicas)
+            for k in range(n):
+                r = self._replicas[(self._maint_rotor + k) % n]
+                if (r.routable and r.engine.alive
+                        and r.engine.maintenance_pending > 0):
+                    self._repair_token = r.name
+                    self._maint_rotor = (self._replicas.index(r) + 1) % n
+                    self.stats.maintenance_windows += 1
+                    r.engine.flush_now()    # wake the worker to repair
+                    break
+
+    def _on_repair(self, name: str, mid: str, solver, key) -> None:
+        """Engine on_repair callback (worker thread): count the round
+        and persist the repaired plan, so a replacement replica restores
+        post-repair stacks instead of pre-drift ones."""
+        with self._lock:
+            self.stats.repairs += 1
+            rec = self._matrices.get(mid)
+        if self.store is None or rec is None:
+            return
+        try:
+            self.store.save(mid, solver, rec.a, rec.key, rec.sig,
+                            extra={"trip": float(rec.trip)})
+            with self._lock:
+                self.stats.recheckpoints += 1
+        except CheckpointError as e:
+            log.warning("re-checkpoint of repaired %r failed: %s", mid, e)
 
     def _note_dead(self, replica: _Replica) -> None:
         """Mark a replica dead (lock held or reentrant)."""
@@ -670,6 +754,44 @@ class ReplicatedSolverFleet:
     def replica_scores(self) -> Dict[str, float]:
         with self._lock:
             return {r.name: r.score.value() for r in self._replicas}
+
+    def maintenance_gauges(self) -> Dict[str, dict]:
+        """Per-replica drift gauges (report-only observability): each
+        live replica's per-matrix maintenance summary plus its scrub /
+        repair counters, as exported by `engine.health()`."""
+        with self._lock:
+            replicas = list(self._replicas)
+        out: Dict[str, dict] = {}
+        for r in replicas:
+            if not r.engine.alive:
+                continue
+            snap = r.engine.health_snapshot()
+            out[r.name] = {
+                "maintenance": snap.get("maintenance", {}),
+                "scrub_probes": snap.get("scrub_probes", 0),
+                "repairs": snap.get("repairs", 0),
+                "blocks_repaired": snap.get("blocks_repaired", 0),
+            }
+        return out
+
+    def maintenance_quiesce(self, timeout: float = 30.0) -> bool:
+        """Wait until every live replica's scrubber has caught up with
+        the device clock.  The repair token is granted by the monitor
+        one replica at a time, so this also waits out the staggered
+        repair windows."""
+        deadline = time.monotonic() + float(timeout)
+        while time.monotonic() < deadline:
+            with self._lock:
+                replicas = [r for r in self._replicas if r.engine.alive]
+            busy = any(r.engine.maintenance_pending > 0 for r in replicas)
+            if not busy:
+                done = all(
+                    r.engine.maintenance_quiesce(timeout=0.01)
+                    for r in replicas)
+                if done:
+                    return True
+            time.sleep(self.poll_interval)
+        return False
 
     def flush_now(self) -> None:
         with self._lock:

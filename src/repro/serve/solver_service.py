@@ -205,6 +205,27 @@ class SolverService:
                        in self._packs.items() if matrix_id not in ids}
         return solver
 
+    def refresh(self, matrix_id: str, solver: ProgrammedSolver) -> None:
+        """Swap in a maintained variant of an already-programmed solver.
+
+        The maintenance hot-path: aging re-finalizes and block repair
+        splices produce a new `ProgrammedSolver` for the SAME matrix,
+        config and plan signature (drift/repair never enter
+        `plan_signature`), so queues, stats, sigs and the digital copy
+        all stay - only the solver handle and any cached packed plan
+        built from its arena are replaced.  Pending right-hand sides are
+        fine: they are answered by the refreshed (healthier) solver at
+        the next flush, which is the whole point of repairing in place.
+        """
+        old = self._solvers[matrix_id]          # unknown ids raise KeyError
+        if solver.n != old.n:
+            raise ValueError(
+                f"refresh for {matrix_id!r} changed n: {old.n} -> "
+                f"{solver.n}")
+        self._solvers[matrix_id] = solver
+        self._packs = {sig: (ids, pp) for sig, (ids, pp)
+                       in self._packs.items() if matrix_id not in ids}
+
     def solver(self, matrix_id: str) -> ProgrammedSolver:
         return self._solvers[matrix_id]
 
